@@ -1,0 +1,56 @@
+"""Paper §5.3: the hybrid dispatch — and calibration of w0.
+
+Measures the full 2-D erosion (both passes) three ways:
+  paper_linear   linear for both passes at every w (paper small-w choice)
+  paper_vhgw     vHGW for both passes at every w (paper baseline)
+  hybrid         the dispatch policy (linear_tree under w0, vHGW above)
+
+Writes the measured crossovers into src/repro/core/calibration.json so
+core.dispatch.DispatchPolicy.calibrated() uses machine-local thresholds —
+the exact procedure the paper followed on Exynos 5422.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+
+from benchmarks.bench_passes import crossover, sweep
+from benchmarks.common import emit, paper_image, time_fn
+from repro.configs.morphology import CONFIG as MORPH
+from repro.core import DispatchPolicy, erode
+from repro.core.dispatch import _CALIBRATION_FILE
+
+
+def run() -> None:
+    x = paper_image()
+    # calibrate from 1-D sweeps (same data as Fig 3/4)
+    fig3 = sweep(axis=-2, fig="calib_rowwindow")
+    fig4 = sweep(axis=-1, fig="calib_colwindow")
+    w0_major = crossover(fig3, small="linear_tree")
+    w0_minor = crossover(fig4, small="linear_tree")
+    with open(_CALIBRATION_FILE, "w") as f:
+        json.dump({"w0_major": int(w0_major), "w0_minor": int(w0_minor),
+                   "small_method": "linear_tree"}, f)
+    emit("calibrated_w0_major", w0_major, f"paper={MORPH.paper_w0_major}")
+    emit("calibrated_w0_minor", w0_minor, f"paper={MORPH.paper_w0_minor}")
+
+    policy = DispatchPolicy.calibrated()
+    for w in (3, 15, 31, 61, 101):
+        t_lin = time_fn(jax.jit(functools.partial(
+            erode, se=(w, w), method="linear")), x)
+        t_vhgw = time_fn(jax.jit(functools.partial(
+            erode, se=(w, w), method="vhgw")), x)
+        t_hyb = time_fn(jax.jit(functools.partial(
+            erode, se=(w, w), method="auto", policy=policy)), x)
+        best = min(t_lin, t_vhgw)
+        emit(f"erode2d_linear_w{w}", t_lin * 1e6)
+        emit(f"erode2d_vhgw_w{w}", t_vhgw * 1e6)
+        emit(f"erode2d_hybrid_w{w}", t_hyb * 1e6,
+             f"envelope_ratio={t_hyb / best:.2f} (<=1.1 reproduces paper §5.3)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Paper Fig. 3 / Fig. 4: 1-D pass execution time vs window size.
+
+Fig. 3 (paper "horizontal pass"): window along the image's *row* index —
+our sublane/major axis (-2). Fig. 4 ("vertical pass"): window along the
+column index — our lane/minor axis (-1). For each axis we sweep w over the
+paper's range and time the three algorithms:
+
+  linear       O(w) accumulator walk   (paper §5.1.2 / §5.2.2)
+  linear_tree  O(log w) doubling ladder (beyond-paper)
+  vhgw         O(1) amortized segment scans (paper §5.1.1 baseline)
+
+Expected reproduction of the paper's claims: linear grows ~linearly in w,
+vHGW is ~flat in w, and they cross at some w0 (paper: 69 / 59) — the
+absolute times and exact w0 differ on CPU+XLA vs NEON, the *shape* and
+the existence of the crossover are the claims under test.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, paper_image, time_fn
+from repro.configs.morphology import CONFIG as MORPH
+from repro.core import linear_1d, linear_1d_tree, vhgw_1d
+
+def _vhgw_transpose(x, w, *, axis, op):
+    """Paper §5.2.1 baseline: transpose -> major-axis vHGW -> transpose.
+
+    Only meaningful for the minor-axis pass, where direct vHGW pays a
+    strided segment reshape; this is exactly why the paper pairs the
+    vertical pass with its fast transpose."""
+    xt = jnp.swapaxes(x, -1, -2)
+    out = vhgw_1d(xt, w, axis=axis, op=op)
+    return jnp.swapaxes(out, -1, -2)
+
+
+METHODS = {
+    "linear": linear_1d,
+    "linear_tree": linear_1d_tree,
+    "vhgw": vhgw_1d,
+}
+
+
+def sweep(axis: int, fig: str) -> dict:
+    x = paper_image()
+    methods = dict(METHODS)
+    if axis % 2 == 1:  # minor axis: add the paper's transpose-trick variant
+        methods["vhgw_T"] = functools.partial(_vhgw_transpose)
+    results = {m: {} for m in methods}
+    for w in MORPH.window_sweep:
+        for mname, fn in methods.items():
+            a = -2 if mname == "vhgw_T" else axis
+            jf = jax.jit(functools.partial(fn, w=w, axis=a, op="min"))
+            t = time_fn(jf, x)
+            results[mname][w] = t
+            emit(f"{fig}_{mname}_w{w}", t * 1e6, f"axis={axis}")
+    return results
+
+
+def crossover(results: dict, small: str = "linear") -> int:
+    """First w where vHGW (best variant) beats the small-window method."""
+    for w in MORPH.window_sweep:
+        big = min(results[m][w] for m in results if m.startswith("vhgw"))
+        if big < results[small][w]:
+            return w
+    return MORPH.window_sweep[-1]
+
+
+def run() -> dict:
+    fig3 = sweep(axis=-2, fig="fig3_rowwindow")
+    fig4 = sweep(axis=-1, fig="fig4_colwindow")
+    w0_major = crossover(fig3)
+    w0_minor = crossover(fig4)
+    emit("fig3_crossover_w0", w0_major, f"paper_w0={MORPH.paper_w0_major}")
+    emit("fig4_crossover_w0", w0_minor, f"paper_w0={MORPH.paper_w0_minor}")
+    return {"fig3": fig3, "fig4": fig4, "w0_major": w0_major, "w0_minor": w0_minor}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV emission, workload generation."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.morphology import CONFIG as MORPH
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def paper_image(seed: int = 0) -> jnp.ndarray:
+    """The paper's experimental input: 800x600 u8 gray image."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, 256, (MORPH.height, MORPH.width), dtype=np.uint8)
+    )
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

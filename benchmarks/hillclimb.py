@@ -1,0 +1,100 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", ""
+) + " --xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lowers a cell in a named *variant* configuration
+and reports the roofline terms, so each hypothesis -> change -> measure
+iteration in EXPERIMENTS.md §Perf is one invocation.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen2.5-3b \
+        --shape decode_32k --variant serve_shardings
+
+Variants:
+  baseline          paper-faithful lowering (same as dryrun)
+  serve_shardings   iteration A: replicate TP params over DP at decode
+  donate_cache      iteration B1: in-place KV cache update
+  serve+donate      A + B1 combined
+  banded_local      iteration C: block-banded local attention (gemma2/hymba)
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import SHAPES, analyze, lower_any
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.config import ARCH_IDS, get_config
+
+CHIPS = 256
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+VARIANTS = {
+    "baseline": {},
+    "serve_shardings": {"serve_shardings": True},
+    "donate_cache": {"donate_cache": True},
+    "serve+donate": {"serve_shardings": True, "donate_cache": True},
+    "banded_local": {"banded_local": True},
+    "int8_kv": {"kv_cache_dtype": "int8"},
+    "int8_kv+serve": {"kv_cache_dtype": "int8", "serve_shardings": True},
+    "moe_ep": {"moe_ep": True},
+    "moe_ep+int8": {"moe_ep": True, "kv_cache_dtype": "int8",
+                    "serve_shardings": True},
+}
+
+
+def measure(arch: str, shape: str, variant: str) -> dict:
+    cfg = get_config(arch)
+    opts = dict(VARIANTS[variant])
+    banded = opts.pop("banded_local", False)
+    mesh = make_production_mesh()
+    tfm.set_banded_local(banded)
+    if opts.get("moe_ep"):
+        from repro.models import ffn
+        ffn.set_moe_ep(mesh)
+    try:
+        lowered = lower_any(cfg, shape, mesh, **opts)
+        compiled = lowered.compile()
+        a = analyze(lowered, compiled)
+    finally:
+        tfm.set_banded_local(False)
+        tfm.set_activation_spec(None)
+        from repro.models import ffn
+        ffn.set_moe_ep(None)
+    terms = {
+        "compute_s": a["flops"] / PEAK_FLOPS,
+        "memory_s": a["bytes_accessed"] / HBM_BW,
+        "collective_s": a["collectives"]["total_bytes"] / ICI_BW,
+    }
+    return {
+        "arch": arch, "shape": shape, "variant": variant,
+        "flops": a["flops"], "bytes": a["bytes_accessed"],
+        "collective_bytes": a["collectives"]["total_bytes"],
+        "collective_kinds": a["collectives"]["bytes"],
+        "temp_bytes": a.get("temp_size_in_bytes"),
+        "terms_s": terms,
+        "dominant": max(terms, key=terms.get),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    r = measure(args.arch, args.shape, args.variant)
+    t = r["terms_s"]
+    print(f"[hillclimb] {args.arch} {args.shape} {args.variant}: "
+          f"C={t['compute_s']:.3e} M={t['memory_s']:.3e} "
+          f"X={t['collective_s']:.3e} dom={r['dominant']} "
+          f"coll={r['collective_bytes']:.3e}B temp={r['temp_bytes']}")
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

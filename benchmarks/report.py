@@ -1,0 +1,87 @@
+"""Render §Dry-run and §Roofline markdown tables from the results JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report > benchmarks/results/report.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def gb(x):
+    return f"{x / 1e9:.2f}" if x is not None else "-"
+
+
+def dryrun_table(path: str, title: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = [f"### {title}", "",
+           "| arch | shape | status | HLO GFLOPs/chip | GB accessed/chip | "
+           "coll GB/chip | temp GB/chip | args GB/chip | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                       f"| - | - | - | - | - | {reason} |")
+            continue
+        a = r["analysis"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {a['flops']/1e9:.1f} | {gb(a['bytes_accessed'])} "
+            f"| {gb(a['collectives']['total_bytes'])} "
+            f"| {gb(a.get('temp_size_in_bytes'))} "
+            f"| {gb(a.get('argument_size_in_bytes'))} "
+            f"| {r['compile_s']} |")
+    ok = sum(r["status"] == "ok" for r in rows)
+    sk = sum(r["status"] == "skipped" for r in rows)
+    er = sum(r["status"] == "error" for r in rows)
+    out.append("")
+    out.append(f"**{ok} ok / {sk} documented skips / {er} errors** "
+               f"({len(rows)} cells)")
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["### Roofline (single-pod 16x16, probe-corrected)", "",
+           "| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful (6ND/HLO) | roofline-MFU |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"{r['status']} | - | - |")
+            continue
+        t = r["terms_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | **{r['dominant'][:-2]}** "
+            f"| {r['usefulness']:.2f} | {r['roofline_mfu']*100:.1f}% |")
+    return "\n".join(out)
+
+
+def main():
+    base = "benchmarks/results"
+    parts = []
+    try:
+        parts.append(dryrun_table(f"{base}/dryrun_single_pod.json",
+                                  "Dry-run — single pod (16x16 = 256 chips)"))
+    except FileNotFoundError:
+        parts.append("single-pod dry-run results missing")
+    try:
+        parts.append(dryrun_table(f"{base}/dryrun_multi_pod.json",
+                                  "Dry-run — multi-pod (2x16x16 = 512 chips)"))
+    except FileNotFoundError:
+        parts.append("multi-pod dry-run results missing")
+    try:
+        parts.append(roofline_table(f"{base}/roofline.json"))
+    except FileNotFoundError:
+        parts.append("roofline results missing")
+    print("\n\n".join(parts))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

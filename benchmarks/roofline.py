@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", ""
+) + " --xla_force_host_platform_device_count=512"
+
+"""Roofline analysis per (arch x shape) on the single-pod mesh (§Roofline).
+
+Methodology
+-----------
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE regardless of
+trip count, so a scanned-layer model reports ~1 layer of FLOPs. This
+driver therefore lowers two *unrolled shallow probes* per cell —
+depth u1 and u2 = 2*u1 (layers; groups for the VLM; enc+dec pairs for
+Whisper) — and extrapolates linearly:
+
+    total(L_units) = f(u1) + (L_units - 1) * (f(u2) - f(u1))
+
+which is exact because the transformer trunk is linear in depth. The same
+correction applies to bytes-accessed and per-kind collective bytes (parsed
+from the partitioned HLO, i.e. already per-chip quantities).
+
+The RWKV/Mamba *time* recurrences run under an inner ``lax.scan`` over T
+that the probes cannot unroll (T up to 524288); their FLOPs are added
+analytically (≈8·hd² per head-step for WKV, ≈8·di·n per step for the SSM
+head — derivation in EXPERIMENTS.md §Roofline notes).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 / chip, 819 GB/s HBM,
+~50 GB/s/link ICI. Terms are reported in seconds per step per chip:
+
+    compute    = flops_chip / 197e12
+    memory     = bytes_chip / 819e9
+    collective = coll_bytes_chip / 50e9
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) with D = tokens/step
+(x1/3 for forward-only cells); the ratio MODEL_FLOPS/HLO_FLOPs is the
+usefulness metric that catches remat/dispatch waste.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.launch.dryrun import SHAPES, analyze, cell_applicable, lower_any
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.config import ARCH_IDS, get_config
+
+CHIPS = 256
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def probe_cfg(cfg, units: int):
+    """A cfg with `units` depth-units (layer / group / enc-dec pair)."""
+    if cfg.family == "vlm":
+        return dataclasses.replace(cfg, num_layers=units * cfg.cross_attn_every)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, num_layers=units, num_encoder_layers=units)
+    return dataclasses.replace(cfg, num_layers=units)
+
+
+def depth_units(cfg) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_layers // cfg.cross_attn_every
+    return cfg.num_layers
+
+
+def recurrence_flops(cfg, shape: str) -> float:
+    """Analytic FLOPs of inner time-scans (global, all chips)."""
+    info = SHAPES[shape]
+    b = info["batch"]
+    t = info["seq"] if info["kind"] in ("train", "prefill") else 1
+    train_mult = 3.0 if info["kind"] == "train" else 1.0
+    total = 0.0
+    if cfg.family == "ssm":  # RWKV-6 WKV
+        h, hd = cfg.d_model // 64, 64
+        total += 8.0 * b * t * h * hd * hd * cfg.num_layers
+    if cfg.family == "hybrid":  # Mamba branch
+        di = cfg.ssm_expand * cfg.d_model
+        total += 8.0 * b * t * di * cfg.ssm_state * cfg.num_layers
+    return total * train_mult
+
+
+def model_flops(cfg, shape: str) -> float:
+    """6·N_active·D convention (global)."""
+    info = SHAPES[shape]
+    tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    n = cfg.active_param_count()
+    mult = 6.0 if info["kind"] == "train" else 2.0
+    return mult * n * tokens + recurrence_flops(cfg, shape)
+
+
+def probe(cfg, shape: str, mesh, units: int) -> dict:
+    tfm.set_unroll(True)
+    try:
+        lowered = lower_any(probe_cfg(cfg, units), shape, mesh)
+        compiled = lowered.compile()
+        return analyze(lowered, compiled)
+    finally:
+        tfm.set_unroll(False)
+        tfm.set_activation_spec(None)
+
+
+def extrapolate(a1: dict, a2: dict, total_units: int, u1: int, u2: int) -> dict:
+    """Linear-in-depth extrapolation from two probes.
+
+    The per-unit slope is clamped to >= 0: GSPMD occasionally lays out the
+    1-unit probe with *more* fixed collectives than the 2-unit probe, and a
+    negative slope would extrapolate to nonsense at full depth."""
+    def ex(v1, v2):
+        per = max((v2 - v1) / (u2 - u1), 0.0)
+        base = max(v1 - u1 * per, 0.0)
+        return base + per * total_units
+
+    out = {
+        "flops": ex(a1["flops"], a2["flops"]),
+        "bytes_accessed": ex(a1["bytes_accessed"], a2["bytes_accessed"]),
+        "collective_bytes": ex(
+            a1["collectives"]["total_bytes"], a2["collectives"]["total_bytes"]
+        ),
+        "collective_kinds": {
+            k: ex(a1["collectives"]["bytes"][k], a2["collectives"]["bytes"][k])
+            for k in a1["collectives"]["bytes"]
+        },
+    }
+    return out
+
+
+def roofline_cell(arch: str, shape: str, *, probes=(1, 2)) -> dict:
+    ok, why = cell_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skipped", "reason": why}
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    u1, u2 = probes
+    if cfg.family == "vlm":
+        u1, u2 = 1, 2  # groups of 5 layers
+    a1 = probe(cfg, shape, mesh, u1)
+    a2 = probe(cfg, shape, mesh, u2)
+    total = extrapolate(a1, a2, depth_units(cfg), u1, u2)
+
+    rec = recurrence_flops(cfg, shape) / CHIPS  # per chip
+    flops_chip = total["flops"] + rec  # probe flops are per-chip (SPMD module)
+    bytes_chip = total["bytes_accessed"]
+    coll_chip = total["collective_bytes"]
+
+    compute_s = flops_chip / PEAK_FLOPS
+    memory_s = bytes_chip / HBM_BW
+    coll_s = coll_chip / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    step_s = max(terms.values())  # no-overlap bound
+    mfu = (mf / CHIPS / step_s) / PEAK_FLOPS if step_s > 0 else 0.0
+    return {
+        "arch": arch,
+        "shape": shape,
+        "status": "ok",
+        "per_chip": {
+            "flops": flops_chip,
+            "bytes": bytes_chip,
+            "collective_bytes": coll_chip,
+            "collective_kinds": total["collective_kinds"],
+        },
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "usefulness": mf / CHIPS / flops_chip if flops_chip else None,
+        "roofline_mfu": mfu,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/roofline.json")
+    args = ap.parse_args(argv)
+
+    cells = (
+        [(a, s) for a in ARCH_IDS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    results = []
+    for arch, shape in cells:
+        try:
+            r = roofline_cell(arch, shape)
+        except Exception as e:  # noqa: BLE001
+            r = {"arch": arch, "shape": shape, "status": "error",
+                 "error": f"{type(e).__name__}: {e}"}
+        if r["status"] == "ok":
+            t = r["terms_s"]
+            print(f"[roofline] {arch:>22} {shape:<12} "
+                  f"C={t['compute_s']:.3e}s M={t['memory_s']:.3e}s "
+                  f"X={t['collective_s']:.3e}s dom={r['dominant'][:-2]:<10} "
+                  f"useful={r['usefulness']:.2f} MFU={r['roofline_mfu']*100:.1f}%",
+                  flush=True)
+        else:
+            print(f"[roofline] {arch:>22} {shape:<12} {r['status']}: "
+                  f"{r.get('reason', r.get('error',''))[:80]}", flush=True)
+        results.append(r)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run as:
+    PYTHONPATH=src python -m benchmarks.run [--only transpose|passes|hybrid|e2e]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["transpose", "passes", "hybrid", "e2e"])
+    args = ap.parse_args(argv)
+
+    from benchmarks import bench_e2e, bench_hybrid, bench_passes, bench_transpose
+
+    suites = {
+        "transpose": bench_transpose.run,  # paper Table 1
+        "passes": bench_passes.run,        # paper Fig. 3 / Fig. 4
+        "hybrid": bench_hybrid.run,        # paper §5.3 + w0 calibration
+        "e2e": bench_e2e.run,              # separability / symmetry / pipeline
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        fn()
+
+
+if __name__ == "__main__":
+    main()

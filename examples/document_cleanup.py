@@ -1,0 +1,44 @@
+"""End-to-end driver #1 — the paper's technique in production: batched
+document-image cleanup feeding the stub vision tower.
+
+Pipeline: synthetic noisy scans -> opening (salt removal) -> closing
+(stroke healing) -> morphological gradient (edge features) -> dilation
+max-pool -> patch embeddings (what llama-3.2-vision's cross-attention
+consumes).
+
+    PYTHONPATH=src python examples/document_cleanup.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (
+    ImagePipelineConfig,
+    cleanup_batch,
+    patch_embed_stub,
+    synth_documents,
+)
+
+cfg = ImagePipelineConfig(height=600, width=800, noise_frac=0.03)
+batch = 8
+
+imgs = synth_documents(cfg, batch)
+print(f"input: {imgs.shape} u8, salt pixels: {(imgs == 255).sum()}")
+
+t0 = time.perf_counter()
+clean, edges = cleanup_batch(imgs)
+clean.block_until_ready()
+dt = time.perf_counter() - t0
+print(f"cleanup: {dt*1e3:.1f} ms for {batch} images "
+      f"({batch/dt:.1f} img/s), salt after: {(np.asarray(clean) == 255).sum()}")
+
+emb = patch_embed_stub(jnp.asarray(clean), d_model=256, n_tokens=256)
+print(f"vision-tower stub tokens: {emb.shape} "
+      f"(these feed VLM cross-attention layers)")
+
+# quality proxy: stroke pixels survive, salt doesn't
+stroke_before = int(((np.asarray(imgs) > 5) & (np.asarray(imgs) < 70)).sum())
+stroke_after = int(((np.asarray(clean) > 5) & (np.asarray(clean) < 70)).sum())
+print(f"stroke retention: {stroke_after / max(stroke_before,1):.2f} "
+      f"(opening removes noise, closing heals strokes)")

@@ -1,0 +1,35 @@
+"""End-to-end driver #3 — batched serving across model families.
+
+Generates from a dense LM, an attention-free RWKV (O(1) state), and the
+enc-dec Whisper (cross-attention KV prefill), all through the same engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import get_config
+from repro.models.model import init_params
+from repro.serve import generate
+
+rng = np.random.default_rng(0)
+
+for arch in ("qwen1.5-0.5b", "rwkv6-7b", "whisper-medium"):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8), dtype=np.int32))
+    ctx = None
+    if cfg.family == "encdec":
+        ctx = jnp.asarray(
+            0.01 * rng.standard_normal((4, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    t0 = time.perf_counter()
+    toks = generate(cfg, params, prompt, max_new_tokens=12, context=ctx)
+    toks = np.asarray(toks)
+    dt = time.perf_counter() - t0
+    print(f"{arch:>16} [{cfg.family}]: {toks.shape} in {dt:.2f}s — "
+          f"sample {toks[0][:8].tolist()}")
+print("OK: three families served through one engine")

@@ -1,0 +1,2 @@
+"""Checkpointing: sharded async save/restore with elastic reshard."""
+from repro.checkpoint.manager import CheckpointManager

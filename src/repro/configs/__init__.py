@@ -1,0 +1,14 @@
+"""Per-architecture configs. Importing this package registers all of them."""
+from repro.configs import (  # noqa: F401
+    gemma_7b,
+    gemma2_2b,
+    qwen2_5_3b,
+    qwen1_5_0_5b,
+    rwkv6_7b,
+    grok_1_314b,
+    dbrx_132b,
+    whisper_medium,
+    hymba_1_5b,
+    llama_3_2_vision_90b,
+    morphology,
+)

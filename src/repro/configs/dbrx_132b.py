@@ -1,0 +1,23 @@
+"""dbrx-132b [moe] — hf:databricks/dbrx-base (unverified tier).
+
+40L, d_model=6144, 48 heads GQA kv=8, head_dim=128, d_ff=10752 per expert,
+vocab 100352, fine-grained MoE 16 experts top-4.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab_size=100_352,
+    ffn_act="swiglu",
+    num_experts=16,
+    num_experts_per_tok=4,
+    tie_embeddings=False,
+    notes="16 experts top-4, fine-grained",
+))

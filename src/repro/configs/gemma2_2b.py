@@ -1,0 +1,26 @@
+"""gemma2-2b [dense] — arXiv:2408.00118 (hf-verified).
+
+26L, d_model=2304, 8 heads GQA kv=4, head_dim=256, d_ff=9216 GeGLU,
+vocab 256000. Alternating local(window 4096)/global layers, logit softcap
+30, attention softcap 50. Local band masks are built with the paper's
+dilation primitive (core.masks.band_mask).
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256_000,
+    ffn_act="geglu",
+    local_window=4096,
+    layer_pattern="local_global",
+    logit_softcap=30.0,
+    attn_softcap=50.0,
+    notes="local+global alternating; softcaps per Gemma-2 report",
+))

@@ -1,0 +1,22 @@
+"""gemma-7b [dense] — arXiv:2403.08295 (hf-verified).
+
+28L, d_model=3072, 16 heads (GQA kv=16 == MHA), head_dim=256 (note:
+heads*head_dim = 4096 != d_model; o_proj maps back), d_ff=24576 GeGLU,
+vocab 256000, RoPE, tied embeddings with sqrt(d) input scaling.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256_000,
+    ffn_act="geglu",
+    rope_theta=10_000.0,
+    notes="GeGLU; head_dim=256; MQA variant exists on gemma-2b only",
+))

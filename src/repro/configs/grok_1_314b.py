@@ -1,0 +1,23 @@
+"""grok-1-314b [moe] — hf:xai-org/grok-1 (unverified tier).
+
+64L, d_model=6144, 48 heads GQA kv=8, head_dim=128, d_ff=32768,
+vocab 131072, MoE 8 experts top-2.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131_072,
+    ffn_act="geglu",
+    num_experts=8,
+    num_experts_per_tok=2,
+    tie_embeddings=False,
+    notes="8 experts top-2",
+))

@@ -1,0 +1,26 @@
+"""hymba-1.5b [hybrid] — arXiv:2411.13676 (hf-verified).
+
+32L, d_model=1600, 25 heads GQA kv=5, head_dim=64, d_ff=5504,
+ssm_state=16: parallel attention + Mamba heads in every layer, sliding
+window attention everywhere except first/middle/last (global) layers.
+Sub-quadratic: runs long_500k (window cache + O(1) SSM state).
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32_001,
+    ffn_act="swiglu",
+    ssm_state=16,
+    ssm_expand=2,
+    local_window=1024,
+    layer_pattern="local",
+    notes="parallel attn+mamba heads; SWA except layers {0, L/2, L-1}",
+))

@@ -1,0 +1,27 @@
+"""llama-3.2-vision-90b [vlm] — hf:meta-llama/Llama-3.2-90B-Vision (unverified).
+
+100L total, d_model=8192, 64 heads GQA kv=8, head_dim=128, d_ff=28672
+SwiGLU, vocab 128256. Every 5th layer is followed by image cross-attention
+(20 cross-attn layers over precomputed patch embeddings — vision tower is
+a STUB per the assignment; the data pipeline runs the paper's morphology
+document-cleanup on images before the stub).
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128_256,
+    ffn_act="swiglu",
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    num_image_tokens=1024,
+    tie_embeddings=False,
+    notes="80 self + 20 cross-attn layers; vision tower stubbed",
+))

@@ -1,0 +1,16 @@
+"""The paper's own workload config: 800x600 u8 grayscale images,
+rectangular SE sweep — used by benchmarks and the document-cleanup example."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MorphologyConfig:
+    height: int = 600
+    width: int = 800
+    dtype: str = "uint8"
+    window_sweep: tuple = (3, 5, 9, 15, 21, 31, 41, 51, 61, 71, 81, 101, 121)
+    paper_w0_minor: int = 59   # paper's w_x0 (lane-axis pass)
+    paper_w0_major: int = 69   # paper's w_y0 (sublane-axis pass)
+
+
+CONFIG = MorphologyConfig()

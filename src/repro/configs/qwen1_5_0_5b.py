@@ -1,0 +1,21 @@
+"""qwen1.5-0.5b [dense] — hf:Qwen/Qwen1.5-0.5B.
+
+24L, d_model=1024, 16 heads (kv=16, MHA), head_dim=64, d_ff=2816 SwiGLU,
+vocab 151936, QKV bias.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151_936,
+    ffn_act="swiglu",
+    qkv_bias=True,
+    notes="QKV bias; MHA (kv==heads)",
+))

@@ -1,0 +1,22 @@
+"""qwen2.5-3b [dense] — hf:Qwen/Qwen2.5-3B (family config per Qwen2.5 report).
+
+36L, d_model=2048, 16 heads GQA kv=2, head_dim=128, d_ff=11008 SwiGLU,
+vocab 151936, QKV bias, RoPE theta 1e6.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151_936,
+    ffn_act="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    notes="GQA kv=2 with QKV bias",
+))

@@ -1,0 +1,23 @@
+"""rwkv6-7b [ssm] — RWKV-6 "Finch", arXiv:2404.05892 (hf-verified).
+
+32L, d_model=4096, attention-free (WKV recurrence with data-dependent
+per-channel decay), d_ff=14336 squared-relu channel-mix, vocab 65536.
+head_dim fixed at 64 -> 64 WKV heads. Sub-quadratic: runs long_500k.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,       # d_model / 64 WKV heads
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65_536,
+    rope_theta=None,
+    lora_rank=32,
+    tie_embeddings=False,
+    notes="Finch: ddlerp token shift + data-dependent decay; O(1) decode state",
+))

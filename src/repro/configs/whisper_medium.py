@@ -1,0 +1,30 @@
+"""whisper-medium [audio] — arXiv:2212.04356 (unverified tier).
+
+Enc-dec: 24L encoder + 24L decoder, d_model=1024, 16 heads (MHA),
+head_dim=64, d_ff=4096 GELU, vocab 51865, LayerNorm, absolute positions
+(sinusoidal encoder / learned decoder). Conv frontend is a STUB: the
+assignment provides precomputed frame embeddings via input_specs(); the
+data pipeline applies the paper's dilation to SpecAugment masks.
+"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,
+    num_encoder_layers=24,
+    encoder_seq=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51_865,
+    ffn_act="gelu",
+    norm="layernorm",
+    rope_theta=None,
+    pos_embed="absolute",
+    max_position=32_768,   # stretched beyond whisper's 448 for decode_32k cells
+    tie_embeddings=True,
+    notes="enc-dec; conv frontend stubbed as precomputed frame embeddings",
+))

@@ -1,0 +1,62 @@
+"""Core contribution of the paper: fast separable morphological filtering.
+
+Public API re-exports. See DESIGN.md for how each piece maps to the paper.
+"""
+from repro.core.dispatch import DispatchPolicy, morph_1d
+from repro.core.linear_pass import linear_1d, linear_1d_paired, linear_1d_tree
+from repro.core.masks import band_mask, dilate_mask, erode_mask, maxpool2d
+from repro.core.morphology import (
+    blackhat,
+    closing,
+    dilate,
+    dilate_naive,
+    erode,
+    erode_naive,
+    gradient,
+    morph2d_naive,
+    opening,
+    tophat,
+)
+from repro.core.types import MAX, MIN, MorphOp, as_op
+from repro.core.vhgw import vhgw_1d
+
+__all__ = [
+    "DispatchPolicy",
+    "morph_1d",
+    "linear_1d",
+    "linear_1d_paired",
+    "linear_1d_tree",
+    "band_mask",
+    "dilate_mask",
+    "erode_mask",
+    "maxpool2d",
+    "erode",
+    "dilate",
+    "erode_naive",
+    "dilate_naive",
+    "opening",
+    "closing",
+    "gradient",
+    "tophat",
+    "blackhat",
+    "morph2d_naive",
+    "MorphOp",
+    "MIN",
+    "MAX",
+    "as_op",
+    "vhgw_1d",
+]
+
+from repro.core.derived import (  # noqa: E402
+    close_open,
+    geodesic_dilate,
+    geodesic_erode,
+    granulometry,
+    h_maxima,
+    h_minima,
+    laplacian,
+    occo,
+    open_close,
+    reconstruct_by_dilation,
+    reconstruct_by_erosion,
+)

@@ -1,0 +1,88 @@
+"""Hybrid dispatch between the linear and vHGW 1-D passes (paper §5.3).
+
+The paper measures crossover windows w_x0 = 59 and w_y0 = 69 on Exynos 5422
+and selects the linear implementation below the crossover, vHGW+SIMD above.
+The two thresholds differ because the two passes touch memory differently —
+the same asymmetry exists on TPU, where the lane (minor) axis pays a
+lane-roll per shifted operand while the sublane axis does not.
+
+Here the thresholds are a :class:`DispatchPolicy` value: defaults come from
+the CPU calibration run (benchmarks/bench_hybrid.py writes
+``calibration.json``), and an analytic TPU estimate is documented in
+EXPERIMENTS.md. The policy is a static (trace-time) decision, like the
+paper's branch — no runtime cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Literal
+
+from repro.core.linear_pass import linear_1d, linear_1d_paired, linear_1d_tree
+from repro.core.types import Array, as_op, check_window
+from repro.core.vhgw import vhgw_1d
+
+Method = Literal["auto", "linear", "linear_paired", "linear_tree", "vhgw"]
+
+_CALIBRATION_FILE = os.path.join(os.path.dirname(__file__), "calibration.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """Crossover thresholds per axis kind.
+
+    ``w0_minor``: threshold for passes along the minormost (lane) axis.
+    ``w0_major``: threshold for passes along any other (sublane/batch) axis.
+    Both mirror the paper's (w_x0, w_y0) pair.
+    """
+
+    w0_minor: int = 15
+    w0_major: int = 31
+    small_method: Method = "linear_tree"  # beyond-paper default; paper used "linear"
+
+    @classmethod
+    def paper(cls) -> "DispatchPolicy":
+        """Thresholds as published for Exynos 5422 + NEON."""
+        return cls(w0_minor=59, w0_major=69, small_method="linear")
+
+    @classmethod
+    def calibrated(cls) -> "DispatchPolicy":
+        """Load thresholds measured by benchmarks/bench_hybrid.py, if any."""
+        if os.path.exists(_CALIBRATION_FILE):
+            with open(_CALIBRATION_FILE) as f:
+                d = json.load(f)
+            return cls(
+                w0_minor=int(d.get("w0_minor", cls.w0_minor)),
+                w0_major=int(d.get("w0_major", cls.w0_major)),
+                small_method=d.get("small_method", "linear_tree"),
+            )
+        return cls()
+
+
+_METHODS = {
+    "linear": linear_1d,
+    "linear_paired": linear_1d_paired,
+    "linear_tree": linear_1d_tree,
+    "vhgw": vhgw_1d,
+}
+
+
+def morph_1d(
+    x: Array,
+    w: int,
+    *,
+    axis: int = -1,
+    op="min",
+    method: Method = "auto",
+    policy: DispatchPolicy | None = None,
+) -> Array:
+    """1-D running min/max with hybrid method selection."""
+    op = as_op(op)
+    w = check_window(w)
+    if method == "auto":
+        policy = policy or DispatchPolicy.calibrated()
+        minor = (axis % x.ndim) == x.ndim - 1
+        w0 = policy.w0_minor if minor else policy.w0_major
+        method = policy.small_method if w <= w0 else "vhgw"
+    return _METHODS[method](x, w, axis=axis, op=op)

@@ -1,0 +1,64 @@
+"""Morphology applied to attention masks and frontend pooling.
+
+These are the honest in-framework uses of the paper's primitive (DESIGN.md
+§4): sliding-window (local) attention masks are dilations of the causal
+diagonal; block-sparse masks can be grown/shrunk by dilation/erosion; and
+max-pooling is dilation with a flat SE followed by striding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dispatch import morph_1d
+from repro.core.linear_pass import linear_1d_tree
+from repro.core.types import Array, check_window
+
+
+def band_mask(q_len: int, kv_len: int, window: int, *, causal: bool = True) -> Array:
+    """Local-attention mask as dilation of the diagonal.
+
+    The identity band (i == j + offset) dilated along the key axis by a
+    1 x (2*window-1) (or causal 1 x window) SE yields exactly the sliding
+    window mask used by Gemma-2 / Hymba local layers.
+    """
+    offset = kv_len - q_len  # query i attends keys <= i + offset
+    eye = (
+        jnp.arange(q_len)[:, None] + offset == jnp.arange(kv_len)[None, :]
+    ).astype(jnp.int8)
+    if causal:
+        # dilate only backwards in keys: shift the (2w-1) dilation and crop
+        w = 2 * window - 1
+        dil = linear_1d_tree(eye, check_window(w), axis=-1, op="max")
+        keep = jnp.arange(kv_len)[None, :] <= jnp.arange(q_len)[:, None] + offset
+        return (dil > 0) & keep
+    w = 2 * window - 1
+    return linear_1d_tree(eye, check_window(w), axis=-1, op="max") > 0
+
+
+def dilate_mask(mask: Array, radius: int, *, axis: int = -1) -> Array:
+    """Grow a boolean mask by ``radius`` along ``axis`` (SpecAugment-style)."""
+    if radius == 0:
+        return mask
+    w = 2 * radius + 1
+    return morph_1d(mask.astype(jnp.int8), w, axis=axis, op="max") > 0
+
+
+def erode_mask(mask: Array, radius: int, *, axis: int = -1) -> Array:
+    if radius == 0:
+        return mask
+    w = 2 * radius + 1
+    return morph_1d(mask.astype(jnp.int8), w, axis=axis, op="min") > 0
+
+
+def maxpool2d(x: Array, pool: int = 2) -> Array:
+    """Max-pool = dilation with a flat pool x pool SE + striding.
+
+    Uses an even-window variant: dilate with window (2*pool-1) centered, then
+    sample the window-anchor grid. For pool in {2, 3} this matches the usual
+    framing of pooling as a morphological operation.
+    """
+    w = 2 * pool - 1
+    d = morph_1d(x, w, axis=-2, op="max")
+    d = morph_1d(d, w, axis=-1, op="max")
+    off = pool // 2
+    return d[..., off::pool, off::pool]

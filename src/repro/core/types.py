@@ -1,0 +1,57 @@
+"""Shared type helpers for the morphology core.
+
+The paper works on 8-bit unsigned images. On TPU we additionally support
+int8 / bfloat16 / float32 so the same primitives can be reused on masks,
+spectrograms and feature maps. Every algorithm in this package is expressed
+in terms of an associative, commutative, idempotent reduction ``op`` (min or
+max) together with its *neutral element*, which is what the paper's
+"process edges separately" becomes in a branch-free padded formulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+Op = Callable[[Array, Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class MorphOp:
+    """A lattice operation (min for erosion, max for dilation)."""
+
+    name: str
+    reduce: Op
+
+    def neutral(self, dtype) -> np.generic:
+        dtype = jnp.dtype(dtype)
+        if jnp.issubdtype(dtype, jnp.floating):
+            inf = np.array(np.inf, dtype=dtype)
+            return inf if self.name == "min" else -inf
+        info = jnp.iinfo(dtype)
+        return np.array(info.max if self.name == "min" else info.min, dtype=dtype)
+
+
+MIN = MorphOp("min", jnp.minimum)
+MAX = MorphOp("max", jnp.maximum)
+
+
+def as_op(name_or_op) -> MorphOp:
+    if isinstance(name_or_op, MorphOp):
+        return name_or_op
+    if name_or_op in ("min", "erode", "erosion"):
+        return MIN
+    if name_or_op in ("max", "dilate", "dilation"):
+        return MAX
+    raise ValueError(f"unknown morphological op: {name_or_op!r}")
+
+
+def check_window(w: int) -> int:
+    """Windows are odd (anchor at center), per the paper's 2*wing+1 form."""
+    w = int(w)
+    if w < 1 or w % 2 == 0:
+        raise ValueError(f"structuring-element extent must be odd and >= 1, got {w}")
+    return w

@@ -1,0 +1,66 @@
+"""van Herk / Gil-Werman 1-D running min/max — pure-JAX implementation.
+
+Algorithm (paper §5.1.1): split the (padded) signal into segments of length
+``w``; compute a forward prefix reduction ``F`` and a backward prefix
+reduction ``B`` within each segment; then every window of length ``w`` spans
+at most two adjacent segments and
+
+    out[i] = op(B[i], F[i + w - 1])          (padded coordinates)
+
+costs O(1) reductions per output element regardless of ``w`` — three
+min/max per pixel amortized, exactly the paper's accounting.
+
+The paper streams F and B through two image-sized scratch buffers; here they
+are materialized as values and XLA fuses the scans, so the "doubled image
+memory" cost of the paper becomes transient. The Pallas kernel variant
+(kernels/morph_vhgw.py) keeps F/B entirely in VMEM per block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, MorphOp, as_op, check_window
+
+
+def _cum(op: MorphOp, x: Array, axis: int, reverse: bool = False) -> Array:
+    fn = jax.lax.cummin if op.name == "min" else jax.lax.cummax
+    return fn(x, axis=axis % x.ndim, reverse=reverse)
+
+
+def vhgw_1d(x: Array, w: int, *, axis: int = -1, op="min") -> Array:
+    """Running min/max of odd window ``w`` along ``axis`` (same-size output).
+
+    Edge policy: neutral-element padding (erosion pads with dtype-max,
+    dilation with dtype-min) — see DESIGN.md §2 for why this replaces the
+    paper's separate edge loop.
+    """
+    op = as_op(op)
+    w = check_window(w)
+    if w == 1:
+        return x
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    wing = (w - 1) // 2
+
+    # Pad so every window is in-bounds, then to a multiple of the segment
+    # length w. Output element i corresponds to padded window [i, i + w - 1].
+    neutral = op.neutral(x.dtype)
+    padded = n + 2 * wing
+    nseg = -(-padded // w)
+    extra = nseg * w - padded
+    xp = jnp.pad(
+        x,
+        [(0, 0)] * (x.ndim - 1) + [(wing, wing + extra)],
+        constant_values=neutral,
+    )
+    segs = xp.reshape(x.shape[:-1] + (nseg, w))
+    fwd = _cum(op, segs, axis=-1).reshape(x.shape[:-1] + (nseg * w,))
+    bwd = _cum(op, segs, axis=-1, reverse=True).reshape(x.shape[:-1] + (nseg * w,))
+
+    out = op.reduce(
+        jax.lax.slice_in_dim(bwd, 0, n, axis=-1),
+        jax.lax.slice_in_dim(fwd, w - 1, w - 1 + n, axis=-1),
+    )
+    return jnp.moveaxis(out, -1, axis)

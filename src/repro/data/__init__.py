@@ -1,0 +1,6 @@
+"""Data pipelines: synthetic token stream, document images (morphology
+cleanup — the paper's technique in production), audio frames (dilated
+SpecAugment masks)."""
+from repro.data.audio import spec_augment, synth_frames
+from repro.data.images import ImagePipelineConfig, cleanup_batch, patch_embed_stub, synth_documents
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig

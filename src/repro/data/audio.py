@@ -1,0 +1,43 @@
+"""Synthetic audio-frame pipeline for the Whisper arch (frontend stub).
+
+The conv frontend is stubbed per the assignment: this module produces
+log-mel-like frame embeddings directly, plus SpecAugment-style time/freq
+masking where the mask widening is a *dilation* along the masked axis
+(core.masks.dilate_mask) — the paper's primitive applied to spectrogram
+augmentation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dilate_mask
+
+
+def synth_frames(batch: int, seq: int, d_model: int, *, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    t = np.arange(seq)[None, :, None]
+    f = rng.random((batch, 1, d_model))
+    x = 0.1 * np.sin(2 * np.pi * (f * t / 50.0)) + 0.01 * rng.standard_normal(
+        (batch, seq, d_model)
+    )
+    return x.astype(np.float32)
+
+
+def spec_augment(frames: jnp.ndarray, *, n_time_masks: int = 2, time_width: int = 8,
+                 n_freq_masks: int = 2, freq_width: int = 4, seed: int = 0) -> jnp.ndarray:
+    """Seed masks at random single positions, then *dilate* to target width."""
+    b, t, d = frames.shape
+    key = jax.random.PRNGKey(seed)
+    kt, kf = jax.random.split(key)
+    tm = jnp.zeros((b, t), bool)
+    pos = jax.random.randint(kt, (b, n_time_masks), 0, t)
+    tm = tm.at[jnp.arange(b)[:, None], pos].set(True)
+    tm = dilate_mask(tm, time_width // 2, axis=-1)  # paper's dilation
+    fm = jnp.zeros((b, d), bool)
+    pos = jax.random.randint(kf, (b, n_freq_masks), 0, d)
+    fm = fm.at[jnp.arange(b)[:, None], pos].set(True)
+    fm = dilate_mask(fm, freq_width // 2, axis=-1)
+    out = jnp.where(tm[:, :, None], 0.0, frames)
+    return jnp.where(fm[:, None, :], 0.0, out)

@@ -1,0 +1,93 @@
+"""Synthetic document-image pipeline — the paper's morphology in production.
+
+Generates noisy scanned-document-like u8 grayscale images (text strokes +
+salt-and-pepper noise + background gradient), then runs the paper's
+separable morphology as the cleanup stage:
+
+  1. opening  (erode-dilate) removes salt noise,
+  2. closing  (dilate-erode) heals broken strokes,
+  3. morphological gradient extracts stroke edges (feature channel),
+
+all via the hybrid vHGW/linear dispatch (core.dispatch). The cleaned image
+is then max-pooled (dilation + stride — core.masks.maxpool2d) into a patch
+grid and linearly embedded: this is the stub "vision tower" whose output
+feeds llama-3.2-vision's cross-attention layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import closing, gradient, maxpool2d, opening
+
+
+@dataclasses.dataclass(frozen=True)
+class ImagePipelineConfig:
+    height: int = 600
+    width: int = 800
+    noise_frac: float = 0.02
+    se_open: tuple = (3, 3)
+    se_close: tuple = (5, 5)
+    patch: int = 16
+    seed: int = 0
+
+
+def synth_documents(cfg: ImagePipelineConfig, batch: int) -> np.ndarray:
+    """(B, H, W) u8, text-like dark strokes on light background."""
+    rng = np.random.default_rng(cfg.seed)
+    img = np.full((batch, cfg.height, cfg.width), 220, np.uint8)
+    # horizontal "text lines"
+    for b in range(batch):
+        n_lines = rng.integers(10, 25)
+        for _ in range(n_lines):
+            y = rng.integers(10, cfg.height - 12)
+            x0 = rng.integers(0, cfg.width // 3)
+            x1 = rng.integers(2 * cfg.width // 3, cfg.width)
+            h = rng.integers(2, 6)
+            # broken strokes: random gaps
+            xs = np.arange(x0, x1)
+            keep = rng.random(xs.size) > 0.15
+            img[b, y : y + h, xs[keep]] = rng.integers(10, 60)
+    # salt & pepper
+    mask = rng.random(img.shape) < cfg.noise_frac
+    img[mask] = rng.choice([0, 255], size=int(mask.sum()))
+    return img
+
+
+@jax.jit
+def _cleanup(img: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    x = opening(img, (3, 3))
+    x = closing(x, (5, 5))
+    edges = gradient(x, (3, 3)).astype(jnp.uint8)
+    return x, edges
+
+
+def cleanup_batch(img: np.ndarray):
+    """Morphological document cleanup: returns (cleaned, edge_features)."""
+    return _cleanup(jnp.asarray(img))
+
+
+def patch_embed_stub(img: jnp.ndarray, d_model: int, *, patch: int = 16,
+                     n_tokens: int | None = None) -> jnp.ndarray:
+    """Stub vision tower: pool -> patchify -> fixed random projection.
+
+    (B, H, W) u8 -> (B, N, d_model) f32. Deterministic projection matrix
+    (PRNG key 0) stands in for the real ViT tower per the assignment.
+    """
+    x = img.astype(jnp.float32) / 255.0
+    x = maxpool2d(x, 2)  # dilation-as-pooling (paper primitive)
+    b, h, w = x.shape
+    h2, w2 = h - h % patch, w - w % patch
+    x = x[:, :h2, :w2].reshape(b, h2 // patch, patch, w2 // patch, patch)
+    x = x.transpose(0, 1, 3, 2, 4).reshape(b, -1, patch * patch)
+    proj = jax.random.normal(jax.random.PRNGKey(0), (patch * patch, d_model)) * 0.02
+    tokens = x @ proj
+    if n_tokens is not None:
+        tokens = tokens[:, :n_tokens]
+        pad = n_tokens - tokens.shape[1]
+        if pad > 0:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad), (0, 0)))
+    return tokens

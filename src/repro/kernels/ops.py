@@ -1,0 +1,100 @@
+"""Jit'd public wrappers over the Pallas kernels (the paper's §5.3 hybrid).
+
+``morph_1d_tpu`` selects:
+
+* algorithm — ``linear`` kernel for small windows, ``vhgw`` kernel for
+  large ones (paper's w0 dispatch; thresholds from core.dispatch policy);
+* axis strategy — the sublane (-2) axis runs natively; the lane (-1) axis
+  runs as transpose-kernel -> sublane pass -> transpose-kernel, the paper's
+  §5.2 transpose trick (or an XLA transpose, selectable, for §Perf A/B).
+
+``erode2d_tpu`` / ``dilate2d_tpu`` compose the two separable passes.
+All entry points accept ``interpret=`` so CPU CI validates the same code
+that targets TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax.numpy as jnp
+
+from repro.core.dispatch import DispatchPolicy
+from repro.core.types import Array, as_op, check_window
+from repro.kernels.fused_gradient import gradient_linear_sublane
+from repro.kernels.morph_linear import morph_linear_sublane
+from repro.kernels.morph_vhgw import morph_vhgw_sublane
+from repro.kernels.transpose import transpose_tiled
+
+LaneStrategy = Literal["transpose_kernel", "xla"]
+
+
+def _sublane_pass(x, w, op, method, policy: DispatchPolicy, interpret):
+    if method == "auto":
+        method = "linear" if w <= policy.w0_major else "vhgw"
+    fn = morph_linear_sublane if method == "linear" else morph_vhgw_sublane
+    return fn(x, w=w, op=op, interpret=interpret)
+
+
+def morph_1d_tpu(
+    x: Array,
+    w: int,
+    *,
+    axis: int = -2,
+    op: str = "min",
+    method: str = "auto",
+    lane_strategy: LaneStrategy = "transpose_kernel",
+    policy: DispatchPolicy | None = None,
+    interpret: bool = True,
+) -> Array:
+    """Kernel-backed running min/max along ``axis`` of a 2-D array."""
+    w = check_window(w)
+    op = as_op(op).name
+    policy = policy or DispatchPolicy.calibrated()
+    if x.ndim != 2:
+        raise ValueError("morph_1d_tpu operates on (H, W); vmap for batches")
+    axis = axis % 2
+    if w == 1:
+        return x
+    if axis == 0:  # sublane axis: native
+        return _sublane_pass(x, w, op, method, policy, interpret)
+    # lane axis: paper's transpose trick
+    if lane_strategy == "transpose_kernel":
+        t = transpose_tiled(x, interpret=interpret)
+        t = _sublane_pass(t, w, op, method, policy, interpret)
+        return transpose_tiled(t, interpret=interpret)
+    xt = jnp.swapaxes(x, 0, 1)
+    out = _sublane_pass(xt, w, op, method, policy, interpret)
+    return jnp.swapaxes(out, 0, 1)
+
+
+def erode2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    w_h, w_w = se
+    y = morph_1d_tpu(x, w_h, axis=0, op="min", **kw)
+    return morph_1d_tpu(y, w_w, axis=1, op="min", **kw)
+
+
+def dilate2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    w_h, w_w = se
+    y = morph_1d_tpu(x, w_h, axis=0, op="max", **kw)
+    return morph_1d_tpu(y, w_w, axis=1, op="max", **kw)
+
+
+def opening2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    return dilate2d_tpu(erode2d_tpu(x, se, **kw), se, **kw)
+
+
+def closing2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    return erode2d_tpu(dilate2d_tpu(x, se, **kw), se, **kw)
+
+
+def gradient_1d_tpu(x: Array, w: int, *, axis: int = -2, interpret: bool = True) -> Array:
+    """Fused 1-D morphological gradient (beyond-paper kernel)."""
+    w = check_window(w)
+    if x.ndim != 2:
+        raise ValueError("gradient_1d_tpu operates on (H, W); vmap for batches")
+    if axis % 2 == 0:
+        return gradient_linear_sublane(x, w=w, interpret=interpret)
+    t = transpose_tiled(x, interpret=interpret)
+    g = gradient_linear_sublane(t, w=w, interpret=interpret)
+    return transpose_tiled(g, interpret=interpret)

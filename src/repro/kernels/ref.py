@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification its kernel is tested
+against (tests/test_kernels.py sweeps shapes and dtypes with
+np.testing.assert_allclose / array_equal).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.linear_pass import linear_1d
+from repro.core.types import Array
+
+
+def transpose_ref(x: Array) -> Array:
+    """Oracle for kernels/transpose.py: plain 2-D transpose (..., H, W) -> (..., W, H)."""
+    return jnp.swapaxes(x, -1, -2)
+
+
+def morph_1d_ref(x: Array, w: int, *, axis: int, op: str) -> Array:
+    """Oracle for both morph kernels: naive windowed reduction."""
+    return linear_1d(x, w, axis=axis, op=op)
+
+
+def gradient_1d_ref(x: Array, w: int, *, axis: int) -> Array:
+    """Oracle for kernels/fused_gradient.py (1-D): dilate - erode, widened."""
+    d = linear_1d(x, w, axis=axis, op="max")
+    e = linear_1d(x, w, axis=axis, op="min")
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return d.astype(jnp.int32) - e.astype(jnp.int32)
+    return d - e

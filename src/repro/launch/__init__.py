@@ -1,0 +1,1 @@
+"""Launchers: production mesh, sharding rules, multi-pod dry-run, CLIs."""

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", ""
+) + " --xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params / optimizer / inputs
+     (jax.eval_shape — zero allocation),
+  3. jits train_step or serve_step with the launch/sharding.py rules,
+  4. ``.lower().compile()`` — any sharding mismatch, OOM-at-compile or
+     unsupported collective fails the cell,
+  5. records memory_analysis / cost_analysis / collective-bytes parsed from
+     the HLO into benchmarks/results/dryrun/<cell>.json for §Roofline.
+
+Shape grid (per assignment):
+  train_4k     seq 4096  gbatch 256   train_step
+  prefill_32k  seq 32768 gbatch 32    train-style forward (prefill lowering)
+  decode_32k   seq 32768 gbatch 128   serve_step (1 token, 32k cache)
+  long_500k    seq 524288 gbatch 1    serve_step — ssm/hybrid archs only
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch import sharding as shd
+from repro.models import transformer as tfm
+from repro.models.config import ARCH_IDS, get_config
+from repro.models.model import (
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    serve_step,
+)
+from repro.optim import adamw_init
+from repro.train.loop import TrainLoopConfig, make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: long_500k needs sub-quadratic attention; "
+                       f"{arch} is full-attention (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch: str, shape: str, cfg=None, *, kv_cache_dtype=None) -> dict:
+    """ShapeDtypeStructs for every model input of this cell."""
+    cfg = cfg or get_config(arch)
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    i32 = jnp.int32
+    if info["kind"] in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.family == "encdec":
+            batch["encoder_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["image_embeddings"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), dt)
+        return batch
+    token = jax.ShapeDtypeStruct((b, 1), i32)
+    pos = jax.ShapeDtypeStruct((), i32)
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, b, s, kv_cache_dtype=kv_cache_dtype))
+    return {"token": token, "pos": pos, "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# Lowering per cell
+# ---------------------------------------------------------------------------
+
+
+def lower_any(cfg, shape: str, mesh, *, serve_shardings: bool = False,
+              donate_cache: bool = False, kv_cache_dtype=None,
+              moe_ep: bool = False):
+    """Lower one cell for an explicit ModelConfig (roofline probes pass
+    modified configs; the dry-run passes the registered full config).
+
+    ``serve_shardings`` / ``donate_cache`` are the §Perf decode iterations
+    (A: replicate TP-sharded params over DP at inference; B: donate the KV
+    cache so the update is in-place) — both default OFF so the recorded
+    baseline stays the paper-faithful FSDP lowering."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    tfm.set_activation_spec(
+        shd.activation_spec(mesh, cfg, s if info["kind"] != "decode" else 1))
+
+    if info["kind"] == "train":
+        specs = input_specs(cfg.name, shape, cfg)
+        state_struct = jax.eval_shape(
+            lambda: (lambda p: {"params": p, "opt": adamw_init(p)})(
+                init_params(cfg, jax.random.PRNGKey(0))
+            )
+        )
+        state_sh = shd.tree_shardings(state_struct, mesh)
+        batch_sh = shd.token_shardings(mesh, specs)
+        step = make_train_step(cfg, TrainLoopConfig(total_steps=1000))
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        with jax.set_mesh(mesh):
+            return jitted.lower(state_struct, specs)
+
+    if info["kind"] == "prefill":
+        # Prefill = the forward (loss without update) at full sequence:
+        # the compute/collective profile of chunked-prefill serving.
+        specs = input_specs(cfg.name, shape, cfg)
+        params_struct = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        params_sh = shd.tree_shardings(params_struct, mesh)
+        batch_sh = shd.token_shardings(mesh, specs)
+
+        def fwd(params, batch):
+            return loss_fn(cfg, params, batch)[0]
+
+        jitted = jax.jit(fwd, in_shardings=(params_sh, batch_sh))
+        with jax.set_mesh(mesh):
+            return jitted.lower(params_struct, specs)
+
+    # decode
+    specs = input_specs(cfg.name, shape, cfg, kv_cache_dtype=kv_cache_dtype)
+    params_struct = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    params_sh = shd.tree_shardings(params_struct, mesh, serve=serve_shardings,
+                                   moe_ep=moe_ep)
+    cache_sh = shd.cache_shardings(mesh, cfg, specs["cache"], b, s)
+    tok_sh = NamedSharding(mesh, P(*(shd.batch_spec(mesh, b) + (None,))))
+    pos_sh = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        partial(serve_step, cfg),
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,) if donate_cache else (),
+    )
+    with jax.set_mesh(mesh):
+        return jitted.lower(
+            params_struct, specs["cache"], specs["token"], specs["pos"])
+
+
+def lower_cell(arch: str, shape: str, mesh):
+    return lower_any(get_config(arch), shape, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Analysis extraction
+# ---------------------------------------------------------------------------
+
+_OPERAND_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of an HLO shape string like 'bf16[256,4096,3072]{...}'."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _OPERAND_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, keyed by kind.
+
+    Scan bodies appear once in HLO but execute L times — the caller
+    rescales using the scan trip counts (see roofline.py probe logic).
+    """
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.-]+ = ((?:\([^)]*\))|(?:\w+\[[^\]]*\][^ ]*)) (\w[\w-]*)\(", ls)
+        if not m:
+            continue
+        shape_part, opname = m.groups()
+        kind = None
+        for c in COLLECTIVES:
+            if opname.startswith(c.replace("-", "_")) or opname.startswith(c):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if shape_part.startswith("("):
+            inner = shape_part[1:-1]
+            total = sum(_shape_bytes(s.strip()) for s in inner.split(",") if "[" in s)
+        else:
+            total = _shape_bytes(shape_part)
+        out[kind] += total
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def analyze(lowered, compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "collectives": coll,
+    }
+    for attr in (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+    ):
+        out[attr] = getattr(mem, attr, None)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool) -> dict:
+    ok, why = cell_applicable(arch, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered = lower_cell(arch, shape, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        cell.update(
+            status="ok",
+            lower_s=round(t1 - t0, 1),
+            compile_s=round(t2 - t1, 1),
+            analysis=analyze(lowered, compiled),
+        )
+    except Exception as e:  # noqa: BLE001 — cell failures are data
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+    finally:
+        tfm.set_activation_spec(None)
+    return cell
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        r = run_cell(arch, shape, multi_pod=args.multi_pod)
+        status = r["status"]
+        extra = ""
+        if status == "ok":
+            a = r["analysis"]
+            extra = (f"flops={a['flops']:.3e} bytes={a['bytes_accessed']:.3e} "
+                     f"coll={a['collectives']['total_bytes']:.3e} "
+                     f"compile={r['compile_s']}s")
+        elif status == "error":
+            extra = r["error"]
+        print(f"[dryrun] {arch:>22} {shape:<12} {r['mesh']:<8} {status:<8} {extra}",
+              flush=True)
+        results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

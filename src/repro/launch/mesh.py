@@ -1,0 +1,28 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A TPU v5e pod is 16x16 = 256 chips; the multi-pod config stacks 2 pods on
+a leading "pod" (DCN) axis. Defined as functions so importing this module
+never touches jax device state (device count is locked at first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch dimension (DP across pods + intra-pod)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_host_mesh():
+    """Whatever is locally available — used by examples/smoke runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

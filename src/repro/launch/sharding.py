@@ -1,0 +1,238 @@
+"""Per-tensor sharding rules: param-name-suffix -> PartitionSpec tail.
+
+Strategy (DESIGN.md §5): 2-D "FSDP + TP" sharding. Every large matrix gets
+one dim on the "data" axis (ZeRO-style — params, grads and AdamW moments
+all fully sharded; the per-layer all-gather happens inside the layer scan)
+and one on "model" (tensor parallelism). Attention heads shard over
+"model" when divisible, otherwise head_dim / sequence takes the axis (see
+``kv_cache_spec``). Batch shards over ("pod","data").
+
+Specs are written for the *last* N dims of a leaf; leading dims (layer
+stack, VLM group dims) are never sharded. Non-divisible dims drop their
+axis (replicate) — guarded by ``_fits``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+# (regex on leaf path, spec tail applied to trailing dims)
+# dp = data axes tuple, tp = "model"
+def _rules(dp, tp):
+    return [
+        (r"embed/embedding$", (tp, dp)),
+        (r"embed/unembed$", (dp, tp)),
+        (r"pos_embed$", (None, dp)),
+        # attention
+        (r"attn/wq$", (dp, tp, None)),
+        (r"attn/wk$", (dp, tp, None)),
+        (r"attn/wv$", (dp, tp, None)),
+        (r"attn/wo$", (tp, dp)),
+        (r"attn/b[qkv]$", (tp, None)),
+        (r"xattn/wq$", (dp, tp, None)),
+        (r"xattn/wk$", (dp, tp, None)),
+        (r"xattn/wv$", (dp, tp, None)),
+        (r"xattn/wo$", (tp, dp)),
+        (r"xattn/b[qkv]$", (tp, None)),
+        # dense mlp
+        (r"mlp/w_gate$", (dp, tp)),
+        (r"mlp/w_up$", (dp, tp)),
+        (r"mlp/w_down$", (tp, dp)),
+        # moe (leading E dim unsharded -> TP-in-expert; _EP_RULES below is the
+        # shard_map expert-parallel layout, §Perf iteration D)
+        (r"moe/router$", (dp, None)),
+        (r"moe/w_gate$", (None, dp, tp)),
+        (r"moe/w_up$", (None, dp, tp)),
+        (r"moe/w_down$", (None, tp, dp)),
+        # rwkv
+        (r"tm/w[rkvgo]$", (dp, tp)),
+        (r"tm/ddlerp_a$", (dp, None)),
+        (r"tm/ddlerp_b$", (None, None, dp)),
+        (r"tm/w_a$", (dp, None)),
+        (r"tm/w_b$", (None, dp)),
+        (r"cm/cm_wk$", (dp, tp)),
+        (r"cm/cm_wv$", (tp, dp)),
+        (r"cm/cm_wr$", (dp, tp)),
+        # mamba (hymba)
+        (r"mamba/in_proj$", (dp, tp)),
+        (r"mamba/out_proj$", (tp, dp)),
+        (r"mamba/x_proj$", (tp, None)),
+        (r"mamba/conv_w$", (None, tp)),
+        (r"mamba/(dt_bias|a_log|d_skip)$", (tp,) ),
+        (r"mamba/a_log$", (tp, None)),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    return "/".join(parts)
+
+
+def _fits(dim: int, axes, mesh) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+_EP_RULES = [  # §Perf iteration D: expert-parallel MoE layout
+    (r"moe/router$", (None, None)),
+    (r"moe/w_gate$", ("model", None, "DP")),
+    (r"moe/w_up$", ("model", None, "DP")),
+    (r"moe/w_down$", ("model", "DP", None)),
+]
+
+
+def spec_for_leaf(path: str, shape: tuple, mesh, *, moe_ep: bool = False) -> P:
+    dp = data_axes(mesh)
+    tp = "model"
+    if moe_ep:
+        for pattern, tail in _EP_RULES:
+            if re.search(pattern, path):
+                tail = tuple(dp if a == "DP" else a for a in tail)
+                n = len(tail)
+                lead = (None,) * (len(shape) - n)
+                spec = [a if _fits(d, a, mesh) else None
+                        for d, a in zip(shape[-n:], tail)]
+                return P(*(lead + tuple(spec)))
+    for pattern, tail in _rules(dp, tp):
+        if re.search(pattern, path):
+            n = len(tail)
+            if n > len(shape):
+                tail = tail[-len(shape):]
+                n = len(tail)
+            lead = (None,) * (len(shape) - n)
+            spec = []
+            for dim, axes in zip(shape[-n:], tail):
+                spec.append(axes if _fits(dim, axes, mesh) else None)
+            return P(*(lead + tuple(spec)))
+    return P()  # replicate (norms, scalars, small vectors)
+
+
+def _param_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _strip_dp(spec: P, dp) -> P:
+    """Replace data-axis entries with None (replicate over DP)."""
+    dpset = set(dp if isinstance(dp, tuple) else (dp,))
+    def clean(e):
+        if e is None:
+            return None
+        es = set(e) if isinstance(e, tuple) else {e}
+        return None if es <= dpset else e
+    return P(*(clean(e) for e in spec))
+
+
+def tree_shardings(tree, mesh, *, serve: bool = False,
+                   serve_hbm_budget: float = 12e9, moe_ep: bool = False) -> Any:
+    """NamedSharding pytree matching ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``serve=True`` applies the inference sharding policy (§Perf iteration
+    A): FSDP's data-axis param sharding exists to fit optimizer state and
+    amortize per-layer all-gathers over large train batches; at decode
+    every step pays the gather for 1 token of work. If TP-sharded params
+    fit the HBM budget, replicate them over the data axes instead — the
+    per-step param all-gathers disappear. Models too big for that
+    (grok-1-314b) keep FSDP sharding.
+    """
+    dp = data_axes(mesh)
+    replicate_dp = False
+    if serve:
+        per_chip = _param_bytes(tree) / mesh.shape["model"]
+        replicate_dp = per_chip <= serve_hbm_budget
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        is_ep_leaf = moe_ep and re.search(r"moe/", ps)
+        spec = spec_for_leaf(ps, tuple(leaf.shape), mesh, moe_ep=moe_ep)
+        if replicate_dp and not is_ep_leaf:  # EP specs are shard_map ABI
+            spec = _strip_dp(spec, dp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh, batch_size: int) -> P:
+    dp = data_axes(mesh)
+    return P(dp) if _fits(batch_size, dp, mesh) else P()
+
+
+def token_shardings(mesh, batch: dict) -> dict:
+    out = {}
+    for k, v in batch.items():
+        bspec = batch_spec(mesh, v.shape[0])
+        if v.ndim >= 3 and v.shape[-1] % mesh.shape["model"] == 0:
+            # frame/image embeddings: shard feature dim over TP too
+            spec = P(*(bspec + (None,) * (v.ndim - 2) + ("model",)))
+        else:
+            spec = P(*(bspec + (None,) * (v.ndim - 1)))
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def activation_spec(mesh, cfg, seq: int) -> Optional[P]:
+    """Megatron-SP-style constraint for the layer-scan carry (B, S, d):
+    batch over DP, sequence over TP — bounds remat-saved bytes/chip."""
+    dp = data_axes(mesh)
+    if seq % mesh.shape["model"] == 0 and seq > 1:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+def kv_cache_spec(mesh, cfg, batch: int, kv_len: int) -> P:
+    """(L, B, T, Kv, D) cache: heads over TP when divisible, else sequence
+    (decode context parallelism); batch over DP when divisible."""
+    dp = data_axes(mesh)
+    b_ax = dp if _fits(batch, dp, mesh) else None
+    if cfg.num_kv_heads % mesh.shape["model"] == 0:
+        return P(None, b_ax, None, "model", None)
+    if kv_len % mesh.shape["model"] == 0:
+        return P(None, b_ax, "model", None, None)
+    return P(None, b_ax, None, None, None)
+
+
+def cache_shardings(mesh, cfg, cache, batch: int, kv_len: int):
+    """Shardings for a DecodeCache pytree (by leaf path family)."""
+    kvspec = kv_cache_spec(mesh, cfg, batch, kv_len)
+    dp = data_axes(mesh)
+    b_ax = dp if _fits(batch, dp, mesh) else None
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path)
+        top = name.split("/")[0]
+        nd = len(leaf.shape)
+        if top in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale") and nd >= 4:
+            # KV-like: trailing dims (..., B, T, Kv, D)
+            lead = (None,) * (nd - 4)
+            return P(*(lead + tuple(kvspec)[-4:]))
+        if top in ("rwkv", "mamba") and nd >= 2:
+            # states: (L, B, ...) — batch over DP
+            return P(None, b_ax, *(None,) * (nd - 2))
+        return P(*(None,) * nd)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [NamedSharding(mesh, leaf_spec(p, l)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,70 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --reduced --steps 100 --batch 8 --seq 128 [--ckpt DIR] [--resume]
+
+On a real fleet this binary runs once per host under the TPU runtime
+(jax.distributed.initialize happens automatically from env); here it runs
+on the local CPU device set. ``--reduced`` selects the smoke config; the
+full configs are exercised via the dry-run (--dryrun delegates).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.models.config import ARCH_IDS, get_config
+from repro.train import Trainer, TrainLoopConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CPU smoke) config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    import numpy as np
+
+    base = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+    ), process_index=jax.process_index(), process_count=jax.process_count())
+
+    def with_extras(it):
+        rng = np.random.default_rng(0)
+        for b in it:
+            if cfg.family == "encdec":
+                b["encoder_frames"] = 0.01 * rng.standard_normal(
+                    (args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+            if cfg.family == "vlm":
+                b["image_embeddings"] = 0.01 * rng.standard_normal(
+                    (args.batch, cfg.num_image_tokens, cfg.d_model)).astype(np.float32)
+            yield b
+
+    loop = TrainLoopConfig(
+        total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
+        peak_lr=args.lr, microbatches=args.microbatches,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt,
+    )
+    trainer = Trainer(cfg, loop, with_extras(base))
+    metrics = trainer.run()
+    print(f"[train] done: {metrics}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+from repro.models.config import ARCH_IDS, ModelConfig, get_config, register

@@ -1,0 +1,257 @@
+"""Grouped-query attention with local/global masking and KV-cache decode.
+
+Covers every attention variant in the assigned pool: MHA (kv == heads),
+GQA (Gemma/Qwen/Grok/DBRX/Hymba/Llama-V), MQA, QKV bias (Qwen), attention
+logit soft-capping (Gemma-2), sliding-window local layers (Gemma-2/Hymba,
+masks built by core.masks.band_mask — i.e. by the paper's dilation
+primitive), RoPE or absolute positions, and cross-attention (Whisper
+decoder, Llama-3.2-Vision image layers).
+
+Decode path: cache allocated at full kv_len per layer, updated with
+``dynamic_update_slice`` at the current position; sliding-window layers
+reuse the same cache with a band mask (ring-buffer compaction is a §Perf
+memory optimization, deliberately not the baseline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap, truncnorm
+
+Array = jnp.ndarray
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, T, Kv, D)
+    v: Array  # (B, T, Kv, D)
+
+
+def attn_init(key, cfg, dtype, *, stacked=None, kv_dim=None) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kd = kv_dim or d
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (h, hd), dtype, stacked=stacked),
+        "wk": dense_init(ks[1], kd, (kv, hd), dtype, stacked=stacked),
+        "wv": dense_init(ks[2], kd, (kv, hd), dtype, stacked=stacked),
+        "wo": dense_init(ks[3], h * hd, (d,), dtype, stacked=stacked),
+    }
+    if cfg.qkv_bias:
+        shape = lambda *s: ((stacked,) + s) if stacked is not None else s
+        p["bq"] = jnp.zeros(shape(h, hd), dtype)
+        p["bk"] = jnp.zeros(shape(kv, hd), dtype)
+        p["bv"] = jnp.zeros(shape(kv, hd), dtype)
+    return p
+
+
+def _project_qkv(cfg, p, x, kv_src):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """q: (B,S,H,D) k/v: (B,T,Kv,D) mask: broadcast to (B,Kv,G,S,T)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, d) * (d ** -0.5)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h * d)
+
+
+def causal_mask(s: int, t: int, *, window: Optional[int] = None) -> Array:
+    """(1,1,1,S,T) causal (optionally banded/sliding-window) mask.
+
+    query i attends key j iff j <= i + (t - s) and (window is None or
+    j > i + (t - s) - window).
+    """
+    qi = jnp.arange(s)[:, None] + (t - s)
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m[None, None, None]
+
+
+def self_attention(cfg, p, x, *, mask, positions) -> Array:
+    q, k, v = _project_qkv(cfg, p, x, x)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+def local_attention_banded(cfg, p, x, *, positions, window: int) -> Array:
+    """Block-banded sliding-window attention (§Perf iteration C).
+
+    The baseline computes full (S, S) scores and masks outside the band —
+    the same waste the paper's linear pass avoids by touching only the
+    window. Queries are chunked into window-sized blocks; each block
+    attends only to itself + the previous block (2W keys), which covers
+    every in-window key exactly. FLOPs and score memory drop from
+    O(S^2) to O(S * 2W) per layer.
+    """
+    b, s, d = x.shape
+    w = window
+    if s % w or s <= w:
+        mask = causal_mask(s, s, window=w)
+        return self_attention(cfg, p, x, mask=mask, positions=positions)
+    q, k, v = _project_qkv(cfg, p, x, x)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    h, dd = q.shape[-2], q.shape[-1]
+    kv = k.shape[2]
+    g = h // kv
+    c = s // w
+    qc = q.reshape(b, c, w, kv, g, dd) * (dd ** -0.5)
+    kc = k.reshape(b, c, w, kv, dd)
+    vc = v.reshape(b, c, w, kv, dd)
+    pad = [(0, 0)] * 5
+    pad[1] = (1, 0)
+    kprev = jnp.pad(kc, pad)[:, :-1]
+    vprev = jnp.pad(vc, pad)[:, :-1]
+    kk = jnp.concatenate([kprev, kc], axis=2)  # (b, c, 2w, kv, dd)
+    vv = jnp.concatenate([vprev, vc], axis=2)
+
+    scores = jnp.einsum("bcikgd,bctkd->bckgit", qc, kk).astype(jnp.float32)
+    scores = softcap(scores, cfg.attn_softcap)
+    # rel position of key t vs query i within the chunk: jg - ig = t - w - i
+    i = jnp.arange(w)[:, None]
+    t = jnp.arange(2 * w)[None, :]
+    rel = t - w - i
+    band = (rel <= 0) & (rel > -w)  # causal, within window
+    # first chunk has no previous block: its first w key slots are padding
+    chunk_ok = (jnp.arange(c)[:, None, None] > 0) | (t[None] >= w)
+    mask = band[None] & chunk_ok  # (c, w, 2w)
+    scores = jnp.where(mask[None, :, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bckgit,bctkd->bcikgd", probs, vv)
+    out = out.reshape(b, s, h * dd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+def cross_attention(cfg, p, x, ctx, *, mask=None) -> Array:
+    q, k, v = _project_qkv(cfg, p, x, ctx)
+    if mask is None:
+        mask = jnp.ones((1, 1, 1, 1, 1), bool)
+    out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+def cross_kv(cfg, p, ctx):
+    """Precompute cross-attention K/V for a fixed context (decode path)."""
+    k = jnp.einsum("btd,dhk->bthk", ctx, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", ctx, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def cross_attention_kv(cfg, p, x, k, v) -> Array:
+    """Cross-attention against precomputed K/V (decode path)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    mask = jnp.ones((1, 1, 1, 1, 1), bool)
+    out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token) path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, kv_len: int, dtype) -> KVCache:
+    shape = (batch, kv_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_attention_quant(cfg, p, x, k8, v8, k_scale, v_scale, pos: Array,
+                           *, window=None):
+    """Decode against an int8-quantized KV cache (§Perf iteration B2).
+
+    Per-token-per-head symmetric quantization: scale = max|k|/127 over
+    head_dim (KIVI-style per-token). Halves cache HBM traffic — the
+    dominant roofline term of MHA decode. Dequantization fuses into the
+    attention contractions.
+
+    k8/v8: (B, T, Kv, D) int8; *_scale: (B, T, Kv, 1) f32.
+    """
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    if cfg.rope_theta is not None:
+        positions = pos[None].astype(jnp.int32) * jnp.ones((x.shape[0], 1), jnp.int32)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    def quant(t):
+        s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+        s = jnp.maximum(s, 1e-8)
+        return jnp.clip(jnp.round(t / s), -127, 127).astype(jnp.int8), s
+
+    kq, ks = quant(k_new)
+    vq, vs = quant(v_new)
+    k8 = jax.lax.dynamic_update_slice(k8, kq, (0, pos, 0, 0))
+    v8 = jax.lax.dynamic_update_slice(v8, vq, (0, pos, 0, 0))
+    k_scale = jax.lax.dynamic_update_slice(
+        k_scale, ks.astype(k_scale.dtype), (0, pos, 0, 0))
+    v_scale = jax.lax.dynamic_update_slice(
+        v_scale, vs.astype(v_scale.dtype), (0, pos, 0, 0))
+
+    t = k8.shape[1]
+    kj = jnp.arange(t)
+    valid = kj <= pos
+    if window is not None:
+        valid &= kj > pos - window
+    mask = valid[None, None, None, None, :]
+
+    b, s_, h, d = q.shape
+    kv = k8.shape[2]
+    g = h // kv
+    qr = q.reshape(b, s_, kv, g, d) * (d ** -0.5)
+    # dequant fused into the contractions (int8 read, f32 math)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qr.astype(jnp.float32),
+        k8.astype(jnp.float32) * k_scale.astype(jnp.float32))
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", probs,
+        v8.astype(jnp.float32) * v_scale.astype(jnp.float32))
+    out = out.reshape(b, s_, h * d).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, (k8, v8, k_scale, v_scale)
+
+
+def decode_attention(cfg, p, x, cache: KVCache, pos: Array, *, window=None):
+    """x: (B, 1, d); pos: scalar int32 — absolute position of this token."""
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    if cfg.rope_theta is not None:
+        positions = pos[None].astype(jnp.int32) * jnp.ones((x.shape[0], 1), jnp.int32)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, pos, 0, 0))
+    t = k.shape[1]
+    kj = jnp.arange(t)
+    valid = kj <= pos
+    if window is not None:
+        valid &= kj > pos - window
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(cfg, q, k, v, mask)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, KVCache(k, v)

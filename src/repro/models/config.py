@@ -1,0 +1,169 @@
+"""Model configuration schema + registry for the assigned architectures.
+
+One frozen dataclass describes every family (dense / MoE / SSM / hybrid /
+enc-dec / VLM); per-arch instances live in src/repro/configs/<id>.py and
+register themselves here. ``reduced()`` derives the CPU smoke-test config
+from the full one (same family and wiring, tiny dims), so smoke tests
+exercise the exact code path the dry-run compiles at full scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+_REGISTRY: dict[str, "ModelConfig"] = {}
+
+ARCH_IDS = [
+    "gemma-7b",
+    "gemma2-2b",
+    "qwen2.5-3b",
+    "qwen1.5-0.5b",
+    "rwkv6-7b",
+    "grok-1-314b",
+    "dbrx-132b",
+    "whisper-medium",
+    "hymba-1.5b",
+    "llama-3.2-vision-90b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention variants
+    ffn_act: str = "swiglu"  # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    logit_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    local_window: Optional[int] = None  # sliding-window width for local layers
+    layer_pattern: str = "global"  # global | local_global (alternating) | local
+    rope_theta: Optional[float] = 10_000.0
+    pos_embed: str = "rope"  # rope | absolute (learned dec + sinusoidal enc)
+    max_position: int = 0  # only for pos_embed == "absolute"
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    lora_rank: int = 32  # RWKV-6 data-dependent decay LoRA rank
+
+    # enc-dec (Whisper)
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500
+
+    # VLM (Llama-3.2-Vision): one cross-attn layer every N self-attn layers
+    cross_attn_every: int = 0
+    num_image_tokens: int = 0
+
+    # misc
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    notes: str = ""
+
+    # ---- derived ----
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.family == "encdec"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (DESIGN.md §Arch-applicability)."""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        heads = min(self.num_heads, 4)
+        kv = max(1, min(self.num_kv_heads, heads))
+        return dataclasses.replace(
+            self,
+            num_layers=2 if self.cross_attn_every == 0 else max(2, self.cross_attn_every),
+            d_model=64,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 4),
+            num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            lora_rank=8,
+            num_encoder_layers=2 if self.num_encoder_layers else 0,
+            encoder_seq=16 if self.num_encoder_layers else self.encoder_seq,
+            cross_attn_every=2 if self.cross_attn_every else 0,
+            num_image_tokens=8 if self.num_image_tokens else 0,
+            local_window=8 if self.local_window else None,
+            dtype="float32",
+        )
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS = 6 N D)."""
+        d, ff, L = self.d_model, self.d_ff, self.num_layers
+        attn = d * self.num_heads * self.head_dim + 2 * d * self.num_kv_heads * self.head_dim
+        attn += self.num_heads * self.head_dim * d
+        if self.ffn_act in ("swiglu", "geglu"):
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        if self.num_experts:
+            mlp *= self.num_experts
+            mlp += d * self.num_experts  # router
+        per_layer = attn + mlp if self.family != "ssm" else (
+            # rwkv6: time-mix (r,k,v,g,o ~ 5 d^2) + channel-mix (3 d ff is stored as 2)
+            5 * d * d + 2 * d * ff
+        )
+        if self.family == "hybrid":
+            per_layer = attn + mlp + 2 * d * d * self.ssm_expand
+        total = L * per_layer + self.vocab_size * d
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        if self.num_encoder_layers:
+            total += self.num_encoder_layers * (attn + mlp) + L * attn  # enc + cross
+        if self.cross_attn_every:
+            total += (L // self.cross_attn_every) * attn
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top-k experts only)."""
+        if not self.num_experts:
+            return self.param_count()
+        full = self.param_count()
+        d, ff, L = self.d_model, self.d_ff, self.num_layers
+        mats = 3 if self.ffn_act in ("swiglu", "geglu") else 2
+        mlp_all = mats * d * ff * self.num_experts * L
+        mlp_active = mats * d * ff * self.num_experts_per_tok * L
+        return int(full - mlp_all + mlp_active)
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        mod = name.replace("-", "_").replace(".", "_")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[name]

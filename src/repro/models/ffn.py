@@ -1,0 +1,244 @@
+"""Feed-forward blocks: gated-linear-unit MLPs and token-choice MoE.
+
+The MoE is a capacity-based, token-dropping top-k router (GShard/Switch
+family — the form Grok-1 and DBRX use) implemented with *gather/scatter*
+dispatch rather than one-hot einsum dispatch, so HLO FLOPs stay close to
+6·N_active·D (the usefulness ratio in §Roofline would otherwise be
+polluted by disguised-gather matmuls). Per-expert selection uses an
+argsort over slot priorities — an O(S log S) integer sort per expert,
+negligible next to the expert GEMMs.
+
+Expert weights are stacked (E, d, ff); the expert GEMM is a batched
+einsum, which under the TP sharding rules (launch/sharding.py) shards ff
+over "model" (TP-in-expert). ``moe_apply_ep`` is the expert-parallel
+shard_map path (§Perf iteration D in EXPERIMENTS.md): experts over
+"model", expert ff over "data", tokens moved instead of weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jnp.ndarray
+
+
+def _act(name: str):
+    return {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_init(key, cfg, dtype, *, stacked=None) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, (ff,), dtype, stacked=stacked),
+            "w_up": dense_init(ks[1], d, (ff,), dtype, stacked=stacked),
+            "w_down": dense_init(ks[2], ff, (d,), dtype, stacked=stacked),
+        }
+    return {
+        "w_up": dense_init(ks[1], d, (ff,), dtype, stacked=stacked),
+        "w_down": dense_init(ks[2], ff, (d,), dtype, stacked=stacked),
+    }
+
+
+def mlp_apply(cfg, p, x: Array) -> Array:
+    act = _act(cfg.ffn_act)
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg, dtype, *, stacked=None) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+
+    def ew(k, i, o):
+        shape = (e, i, o) if stacked is None else (stacked, e, i, o)
+        return (0.02 * jax.random.truncated_normal(k, -2.0, 2.0, shape)).astype(dtype)
+
+    return {
+        "router": dense_init(ks[0], d, (e,), jnp.float32, stacked=stacked),
+        "w_gate": ew(ks[1], d, ff),
+        "w_up": ew(ks[2], d, ff),
+        "w_down": ew(ks[3], ff, d),
+    }
+
+
+# Expert-parallel hook (§Perf iteration D): when a mesh is installed here
+# and E % tp == 0, MoE blocks run the shard_map EP path instead of the
+# GSPMD-FSDP path. Installed by launch/dryrun (variant) or a launcher.
+_EP_MESH = None
+
+
+def set_moe_ep(mesh) -> None:
+    global _EP_MESH
+    _EP_MESH = mesh
+
+
+def ep_enabled(cfg) -> bool:
+    return (
+        _EP_MESH is not None
+        and cfg.num_experts > 0
+        and cfg.num_experts % _EP_MESH.shape["model"] == 0
+    )
+
+
+def _routing(cfg, probs, x_dtype):
+    """Shared top-k routing math -> (gate_w, gate_idx, aux)."""
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    gate_w, gate_idx = jax.lax.top_k(probs, k)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=(1, 2))
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return gate_w, gate_idx, aux.astype(jnp.float32)
+
+
+def moe_apply_ep(cfg, p, x: Array) -> tuple[Array, Array]:
+    """Expert-parallel MoE (§Perf iteration D, decode-oriented).
+
+    Layout: experts over "model" (E_loc = E/tp per rank), expert ff over
+    the data axes (ff_loc = ff/dp); tokens are all-gathered over data
+    inside the region (cheap at decode: B·d bytes) and each (data, model)
+    chip computes its (ff-shard, expert-shard) partial, reduced with two
+    psums. Weight movement per step: ZERO — the FSDP per-layer expert
+    weight all-gathers (the dominant collective of the MoE decode cells)
+    disappear; activations move instead (B·d ≪ E·d·ff).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import data_axes
+
+    mesh = _EP_MESH
+    dp = data_axes(mesh)
+    tp = mesh.shape["model"]
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    e_loc = e // tp
+    act = _act(cfg.ffn_act)
+
+    pspecs = {
+        "router": P(None, None),
+        "w_gate": P("model", None, dp),
+        "w_up": P("model", None, dp),
+        "w_down": P("model", dp, None),
+    }
+    xspec = P(dp, None, None)
+
+    def local_fn(pm, xx):
+        # xx: (B_loc, S, d) -> gather the full token set over the data axes
+        xf = xx
+        for ax in reversed(dp):  # innermost first => axis0 ends dp[0]-major
+            xf = jax.lax.all_gather(xf, ax, axis=0, tiled=True)
+        b, s, d = xf.shape
+        cap = max(1, int(b * s * k / e * cfg.moe_capacity_factor))
+        logits = jnp.einsum("bsd,de->bse", xf.astype(jnp.float32), pm["router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_idx, aux = _routing(cfg, probs, xf.dtype)
+        # aux is identical on every rank post-gather; pmean proves it to
+        # the replication checker.
+        for ax in dp:
+            aux = jax.lax.pmean(aux, ax)
+
+        # flatten tokens across (B, S) — decode has S=1, so route over B
+        t = b * s
+        expert_of = gate_idx.reshape(t, k)
+        weight_of = gate_w.reshape(t, k)
+        flat_x = xf.reshape(t, d)
+        big = jnp.int32(t * k + 1)
+        slot_pos = jnp.arange(t * k, dtype=jnp.int32)
+        tok_of = slot_pos // k
+        my_e0 = jax.lax.axis_index("model") * e_loc
+
+        out = jnp.zeros((t, d), jnp.float32)
+        for j in range(e_loc):
+            ei = my_e0 + j
+            prio = jnp.where(expert_of.reshape(-1) == ei, slot_pos, big)
+            order = jnp.argsort(prio)[:cap]
+            valid = jnp.take(prio, order) < big
+            tok = jnp.take(tok_of, order)
+            wgt = jnp.take(weight_of.reshape(-1), order) * valid
+            xe = flat_x[tok]  # (cap, d)
+            h = act(jnp.einsum("cd,df->cf", xe, pm["w_gate"][j]))
+            h = h * jnp.einsum("cd,df->cf", xe, pm["w_up"][j])
+            ye = jnp.einsum("cf,fd->cd", h, pm["w_down"][j])  # partial over ff
+            out = out.at[tok].add(ye.astype(jnp.float32) * wgt[:, None])
+        # reduce ff-partials over data, then expert-partials over model
+        for ax in dp:
+            out = jax.lax.psum(out, ax)
+        out = jax.lax.psum(out, "model")
+        out = out.reshape(b, s, d).astype(xf.dtype)
+        # return this rank's data slice
+        b_loc = xx.shape[0]
+        i0 = 0
+        mul = 1
+        for ax in reversed(dp):
+            i0 = i0 + jax.lax.axis_index(ax) * mul
+            mul = mul * mesh.shape[ax]
+        out = jax.lax.dynamic_slice_in_dim(out, i0 * b_loc, b_loc, axis=0)
+        return out, aux
+
+    out, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(pspecs, xspec),
+        out_specs=(xspec, P()),
+    )(p, x)
+    return out, aux
+
+
+def moe_apply(cfg, p, x: Array) -> tuple[Array, Array]:
+    """Token-choice top-k MoE with capacity dropping.
+
+    x: (B, S, d) -> (out, aux_loss). Routing groups are batch rows, so all
+    dispatch gathers/scatters are local to the "data" mesh axis.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = max(1, int(s * k / e * cfg.moe_capacity_factor))
+    act = _act(cfg.ffn_act)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch eq. 4-6).
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=(1, 2)
+    )  # (B, E)
+    frac_probs = jnp.mean(probs, axis=1)  # (B, E)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    # Flatten the (S, k) assignment slots in token order.
+    slots = s * k
+    expert_of = gate_idx.reshape(b, slots)
+    tok_of = jnp.repeat(jnp.arange(s), k)[None, :].astype(jnp.int32)  # (1, slots)
+    weight_of = gate_w.reshape(b, slots)
+
+    big = jnp.int32(slots + 1)
+    slot_pos = jnp.arange(slots, dtype=jnp.int32)[None, :]
+    out = jnp.zeros((b, s, d), x.dtype)
+    batch_ix = jnp.arange(b)[:, None]
+    for ei in range(e):  # unrolled: E is a small static constant (8 / 16)
+        prio = jnp.where(expert_of == ei, slot_pos, big)
+        order = jnp.argsort(prio, axis=-1)[:, :cap]  # first `cap` slots, token order
+        sel_prio = jnp.take_along_axis(prio, order, axis=-1)
+        valid = sel_prio < big  # (B, cap)
+        tok = jnp.take_along_axis(jnp.broadcast_to(tok_of, (b, slots)), order, axis=-1)
+        wgt = jnp.take_along_axis(weight_of, order, axis=-1) * valid  # drops overflow
+        xe = x[batch_ix, tok]  # (B, cap, d) gather
+        h = act(jnp.einsum("bcd,df->bcf", xe, p["w_gate"][ei]))
+        h = h * jnp.einsum("bcd,df->bcf", xe, p["w_up"][ei])
+        ye = jnp.einsum("bcf,fd->bcd", h, p["w_down"][ei])
+        out = out.at[batch_ix, tok].add((ye * wgt[..., None]).astype(x.dtype))
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,117 @@
+"""Primitive NN layers as pure functions over parameter pytrees.
+
+No flax/haiku in this environment, so parameters are plain nested dicts of
+jnp arrays. Initializers build *stacked* per-layer leaves (leading dim =
+num_layers) so the transformer stack runs under one ``lax.scan`` — this
+keeps HLO size O(1) in depth, which both the 1-core compile budget and the
+512-device dry-run depend on (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+def truncnorm(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dims, dtype, *, stacked: int | None = None):
+    """Weight of shape (in_dim, *out_dims), optionally layer-stacked."""
+    shape = (in_dim,) + tuple(np.atleast_1d(out_dims))
+    if stacked is not None:
+        shape = (stacked,) + shape
+    return truncnorm(key, shape, dtype, scale=0.02 / np.sqrt(max(in_dim / 1024, 1)))
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(cfg, x: Array, p: dict) -> Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def norm_init(cfg, dtype, *, stacked: int | None = None) -> dict:
+    shape = (cfg.d_model,) if stacked is None else (stacked, cfg.d_model)
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones(shape, dtype), "bias": jnp.zeros(shape, dtype)}
+    return {"scale": jnp.zeros(shape, dtype)}  # rmsnorm stores (scale - 1)
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_embed(seq: int, d: int) -> Array:
+    """Fixed sinusoidal position table (Whisper encoder)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg, dtype) -> dict:
+    p = {"embedding": truncnorm(key, (cfg.vocab_size, cfg.d_model), dtype, 0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncnorm(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size), dtype, 0.02
+        )
+    return p
+
+
+def embed(p: dict, tokens: Array, cfg) -> Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    # Gemma-style sqrt(d) scaling is harmless for the others at init scale.
+    return (x.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))).astype(x.dtype)
+
+
+def unembed(p: dict, x: Array, cfg) -> Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"])
+    return softcap(logits, cfg.logit_softcap)

@@ -1,0 +1,423 @@
+"""Model assembly: init / train forward / decode step for all 10 archs.
+
+Public surface:
+  init_params(cfg, key)                    -> param pytree (stacked layers)
+  forward_train(cfg, params, batch)        -> (logits, aux_loss)
+  loss_fn(cfg, params, batch)              -> (loss, metrics)
+  init_decode_cache(cfg, batch, kv_len)    -> cache pytree
+  serve_step(cfg, params, cache, token, pos) -> (logits, new_cache)
+
+``batch`` for training: {"tokens": (B,S) i32, "labels": (B,S) i32} plus
+family extras — "encoder_frames" (B,Tenc,d) for Whisper (conv frontend is a
+stub: precomputed frame embeddings per the assignment), and
+"image_embeddings" (B,Nimg,d) for Llama-3.2-Vision (patch frontend stub).
+
+Decode caches are layer-stacked pytrees scanned together with the layer
+params, so the decode step is also O(1) HLO in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import ffn, ssm, transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    embed,
+    embed_init,
+    norm_apply,
+    norm_init,
+    sinusoid_embed,
+    truncnorm,
+    unembed,
+)
+
+Array = jnp.ndarray
+
+
+def _dtype(cfg) -> Any:
+    return jnp.dtype(cfg.dtype)
+
+
+def _kind(cfg) -> str:
+    return {
+        "dense": "dense",
+        "moe": "moe",
+        "ssm": "rwkv",
+        "hybrid": "hymba",
+        "encdec": "encdec",
+        "vlm": "vlm",
+    }[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "embed": embed_init(ks[0], cfg, dt),
+        "ln_final": norm_init(cfg, dt),
+    }
+    kind = _kind(cfg)
+    if kind == "vlm":
+        p["layers"] = tfm.vlm_stack_init(cfg, ks[1], dt)
+    elif kind == "encdec":
+        p["layers"] = tfm.stack_init(cfg, ks[1], dt, cfg.num_layers, kind="encdec")
+        p["enc_layers"] = tfm.stack_init(
+            cfg, ks[2], dt, cfg.num_encoder_layers, kind="dense"
+        )
+        p["ln_enc_final"] = norm_init(cfg, dt)
+        p["pos_embed"] = truncnorm(ks[3], (cfg.max_position, cfg.d_model), dt, 0.01)
+    else:
+        p["layers"] = tfm.stack_init(cfg, ks[1], dt, cfg.num_layers, kind=kind)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def _encode(cfg, params, frames: Array) -> Array:
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    x = frames + sinusoid_embed(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = tfm.encoder_stack(cfg, params["enc_layers"], x)
+    return norm_apply(cfg, x, params["ln_enc_final"])
+
+
+def forward_train(cfg: ModelConfig, params, batch) -> tuple[Array, Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kind = _kind(cfg)
+
+    if kind == "encdec":
+        ctx = _encode(cfg, params, batch["encoder_frames"])
+        x = x + params["pos_embed"][None, :s].astype(x.dtype)
+        x, aux = tfm.encdec_decoder_stack(cfg, params["layers"], x, ctx, positions=positions)
+    elif kind == "vlm":
+        x, aux = tfm.vlm_stack(
+            cfg, params["layers"], x, batch["image_embeddings"], positions=positions
+        )
+    else:
+        x, aux = tfm.decoder_stack(cfg, params["layers"], x, positions=positions, kind=kind)
+
+    x = norm_apply(cfg, x, params["ln_final"])
+    return unembed(params["embed"], x, cfg), aux
+
+
+def _hidden_for_loss(cfg: ModelConfig, params, batch):
+    """Shared trunk of forward_train without the unembedding."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kind = _kind(cfg)
+    if kind == "encdec":
+        ctx = _encode(cfg, params, batch["encoder_frames"])
+        x = x + params["pos_embed"][None, :s].astype(x.dtype)
+        x, aux = tfm.encdec_decoder_stack(cfg, params["layers"], x, ctx, positions=positions)
+    elif kind == "vlm":
+        x, aux = tfm.vlm_stack(
+            cfg, params["layers"], x, batch["image_embeddings"], positions=positions
+        )
+    else:
+        x, aux = tfm.decoder_stack(cfg, params["layers"], x, positions=positions, kind=kind)
+    return norm_apply(cfg, x, params["ln_final"]), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01,
+            loss_chunk: int = 512):
+    """Cross-entropy with *chunked* unembedding.
+
+    The full (B, S, V) logits tensor is never materialized: the sequence is
+    scanned in chunks of ``loss_chunk`` and each chunk's logits are
+    rematerialized in the backward pass (fused-softmax-CE convention —
+    without this, gemma-7b at B=256 / S=4k / V=256k would need ~1 TB of
+    transient logits).
+    """
+    x, aux = _hidden_for_loss(cfg, params, batch)
+    labels = batch["labels"]
+    b, s = labels.shape
+    c = min(loss_chunk, s)
+    if s % c:
+        c = s  # fall back to unchunked for odd small seqs
+    nchunk = s // c
+    xs = x.reshape(b, nchunk, c, -1).swapaxes(0, 1)  # (nchunk, B, c, d)
+    ls = labels.reshape(b, nchunk, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_ll(xc, lc):
+        logits = unembed(params["embed"], xc, cfg)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0].sum()
+
+    def body(acc, inp):
+        xc, lc = inp
+        return acc + chunk_ll(xc, lc), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ls),
+                            unroll=tfm.unrolled())
+    ce = -total / (b * s)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    """Union cache — unused fields are () placeholders per family.
+
+    ``k_scale``/``v_scale`` are populated only for the int8-quantized KV
+    cache (§Perf iteration B2)."""
+
+    k: Any = ()
+    v: Any = ()
+    rwkv: Any = ()
+    mamba: Any = ()
+    cross_k: Any = ()
+    cross_v: Any = ()
+    k_scale: Any = ()
+    v_scale: Any = ()
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, kv_len: int,
+                      *, kv_cache_dtype=None) -> DecodeCache:
+    dt = _dtype(cfg)
+    L = cfg.num_layers
+    kind = _kind(cfg)
+
+    if kv_cache_dtype == "int8" and kind in ("dense", "moe"):
+        shape = (L, batch, kv_len, cfg.num_kv_heads, cfg.head_dim)
+        sshape = shape[:-1] + (1,)
+        return DecodeCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(sshape, jnp.float32),
+            v_scale=jnp.zeros(sshape, jnp.float32),
+        )
+
+    def kv(n_layers, t):
+        shape = (n_layers, batch, t, cfg.num_kv_heads, cfg.head_dim)
+        return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+    if kind == "rwkv":
+        st = ssm.rwkv_init_state(cfg, batch, dt)
+        return DecodeCache(
+            rwkv=jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), st)
+        )
+    if kind == "hymba":
+        k, v = kv(L, kv_len)
+        ms = ssm.mamba_init_state(cfg, batch, dt)
+        return DecodeCache(
+            k=k, v=v,
+            mamba=jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), ms),
+        )
+    if kind == "encdec":
+        k, v = kv(L, kv_len)
+        ck = jnp.zeros((L, batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt)
+        return DecodeCache(k=k, v=v, cross_k=ck, cross_v=ck)
+    if kind == "vlm":
+        per, g = cfg.cross_attn_every, cfg.num_layers // cfg.cross_attn_every
+        k_in = jnp.zeros((g, per - 1, batch, kv_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        k_last = jnp.zeros((g, batch, kv_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        ck = jnp.zeros((g, batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim), dt)
+        return DecodeCache(
+            k={"self": k_in, "last": k_last},
+            v={"self": k_in, "last": k_last},
+            cross_k=ck, cross_v=ck,
+        )
+    k, v = kv(L, kv_len)
+    return DecodeCache(k=k, v=v)
+
+
+def prefill_cross_kv(cfg, params, cache: DecodeCache, ctx: Array) -> DecodeCache:
+    """Populate encoder/image cross-attention K/V (once per request)."""
+    kind = _kind(cfg)
+    if kind == "encdec":
+        enc = _encode(cfg, params, ctx)
+        ck, cv = jax.vmap(
+            lambda p: attn_mod.cross_kv(cfg, p, enc)
+        )(params["layers"]["xattn"])
+        return cache._replace(cross_k=ck, cross_v=cv)
+    if kind == "vlm":
+        ck, cv = jax.vmap(
+            lambda p: attn_mod.cross_kv(cfg, p, ctx)
+        )(params["layers"]["xattn"])
+        return cache._replace(cross_k=ck, cross_v=cv)
+    return cache
+
+
+def serve_step(cfg: ModelConfig, params, cache: DecodeCache, token: Array, pos: Array):
+    """One decode step. token: (B, 1) i32; pos: scalar i32. -> (logits, cache)."""
+    x = embed(params["embed"], token, cfg)
+    kind = _kind(cfg)
+    is_local = tfm.layer_is_local(cfg)
+    win = cfg.local_window
+
+    if kind == "rwkv":
+        def body(x, inp):
+            layer_p, st = inp
+            x, st = tfm.rwkv_block(cfg, layer_p, x, st)
+            return x, st
+
+        def scan_body(x, inp):
+            # token-level decode: seq dim of 1
+            return body(x, inp)
+
+        x2 = x
+        x2, new_state = jax.lax.scan(scan_body, x2, (params["layers"], cache.rwkv), unroll=tfm.unrolled())
+        x, new_cache = x2, cache._replace(rwkv=new_state)
+
+    elif kind == "hymba":
+        def body(x, inp):
+            layer_p, k, v, mst, loc = inp
+            kvc = attn_mod.KVCache(k, v)
+            n = norm_apply(cfg, x, layer_p["ln_attn"])
+            a, kvc = attn_mod.decode_attention(
+                cfg, layer_p["attn"], n, kvc, pos,
+                window=jnp.where(loc, win, 10**9) if win else None,
+            )
+            m, mst = ssm.mamba_apply(cfg, layer_p["mamba"], n, mst)
+            fused = 0.5 * (
+                norm_apply(cfg, a, layer_p["ln_a_out"])
+                + norm_apply(cfg, m, layer_p["ln_m_out"])
+            )
+            x = x + fused
+            x = x + ffn.mlp_apply(cfg, layer_p["mlp"], norm_apply(cfg, x, layer_p["ln_mlp"]))
+            return x, (kvc.k, kvc.v, mst)
+
+        x, (nk, nv, nms) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v, cache.mamba, is_local),
+            unroll=tfm.unrolled(),
+        )
+        new_cache = cache._replace(k=nk, v=nv, mamba=nms)
+
+    elif kind == "encdec":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0
+        )[None].astype(x.dtype)
+
+        def body(x, inp):
+            layer_p, k, v, ck, cv = inp
+            kvc = attn_mod.KVCache(k, v)
+            a, kvc = attn_mod.decode_attention(
+                cfg, layer_p["attn"], norm_apply(cfg, x, layer_p["ln_attn"]), kvc, pos
+            )
+            x = x + a
+            x = x + attn_mod.cross_attention_kv(
+                cfg, layer_p["xattn"], norm_apply(cfg, x, layer_p["ln_xattn"]), ck, cv
+            )
+            x = x + ffn.mlp_apply(cfg, layer_p["mlp"], norm_apply(cfg, x, layer_p["ln_mlp"]))
+            return x, (kvc.k, kvc.v)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v, cache.cross_k, cache.cross_v),
+            unroll=tfm.unrolled(),
+        )
+        new_cache = cache._replace(k=nk, v=nv)
+
+    elif kind == "vlm":
+        per = cfg.cross_attn_every
+
+        def self_decode(x, layer_p, k, v):
+            kvc = attn_mod.KVCache(k, v)
+            a, kvc = attn_mod.decode_attention(
+                cfg, layer_p["attn"], norm_apply(cfg, x, layer_p["ln_attn"]), kvc, pos
+            )
+            x = x + a
+            x = x + ffn.mlp_apply(cfg, layer_p["mlp"], norm_apply(cfg, x, layer_p["ln_mlp"]))
+            return x, kvc
+
+        def body(x, inp):
+            group_p, ks, vs, kl, vl, ck, cv = inp
+            new_ks, new_vs = [], []
+            for i in range(per - 1):
+                layer_p = jax.tree.map(lambda a: a[i], group_p["self"])
+                x, kvc = self_decode(x, layer_p, ks[i], vs[i])
+                new_ks.append(kvc.k)
+                new_vs.append(kvc.v)
+            x, kvc = self_decode(x, group_p["last_self"], kl, vl)
+            x = x + attn_mod.cross_attention_kv(
+                cfg, group_p["xattn"], norm_apply(cfg, x, group_p["ln_xattn"]), ck, cv
+            )
+            return x, (jnp.stack(new_ks), jnp.stack(new_vs), kvc.k, kvc.v)
+
+        x, (nks, nvs, nkl, nvl) = jax.lax.scan(
+            body,
+            x,
+            (
+                params["layers"], cache.k["self"], cache.v["self"],
+                cache.k["last"], cache.v["last"], cache.cross_k, cache.cross_v,
+            ),
+            unroll=tfm.unrolled(),
+        )
+        new_cache = cache._replace(
+            k={"self": nks, "last": nkl}, v={"self": nvs, "last": nvl}
+        )
+
+    else:  # dense / moe decode
+        quantized = getattr(cache.k, "dtype", None) == jnp.int8
+
+        def mlp_part(x, layer_p):
+            if kind == "moe":
+                apply = ffn.moe_apply_ep if ffn.ep_enabled(cfg) else ffn.moe_apply
+                out, _ = apply(
+                    cfg, layer_p["moe"], norm_apply(cfg, x, layer_p["ln_mlp"]))
+                return x + out
+            return x + ffn.mlp_apply(
+                cfg, layer_p["mlp"], norm_apply(cfg, x, layer_p["ln_mlp"]))
+
+        def body(x, inp):
+            if quantized:
+                if is_local is not None:
+                    layer_p, k, v, ks_, vs_, loc = inp
+                    window = jnp.where(loc, win, 10**9)
+                else:
+                    layer_p, k, v, ks_, vs_ = inp
+                    window = None
+                a, kv_out = attn_mod.decode_attention_quant(
+                    cfg, layer_p["attn"], norm_apply(cfg, x, layer_p["ln_attn"]),
+                    k, v, ks_, vs_, pos, window=window,
+                )
+                x = mlp_part(x + a, layer_p)
+                return x, kv_out
+            if is_local is not None:
+                layer_p, k, v, loc = inp
+                window = jnp.where(loc, win, 10**9)
+            else:
+                layer_p, k, v = inp
+                window = None
+            kvc = attn_mod.KVCache(k, v)
+            a, kvc = attn_mod.decode_attention(
+                cfg, layer_p["attn"], norm_apply(cfg, x, layer_p["ln_attn"]), kvc, pos,
+                window=window,
+            )
+            x = mlp_part(x + a, layer_p)
+            return x, (kvc.k, kvc.v)
+
+        xs = (params["layers"], cache.k, cache.v)
+        if quantized:
+            xs = xs + (cache.k_scale, cache.v_scale)
+        if is_local is not None:
+            xs = xs + (is_local,)
+        if quantized:
+            x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs, unroll=tfm.unrolled())
+            new_cache = cache._replace(k=nk, v=nv, k_scale=nks, v_scale=nvs)
+        else:
+            x, (nk, nv) = jax.lax.scan(body, x, xs, unroll=tfm.unrolled())
+            new_cache = cache._replace(k=nk, v=nv)
+
+    x = norm_apply(cfg, x, params["ln_final"])
+    return unembed(params["embed"], x, cfg), new_cache

@@ -1,0 +1,226 @@
+"""Attention-free sequence mixers: RWKV-6 ("Finch") and a Mamba-style
+selective SSM head (used by Hymba's parallel attn+mamba layers).
+
+RWKV-6 (arXiv:2404.05892) per layer:
+  time-mix: data-dependent token-shift lerp (ddlerp, 5 low-rank adapters),
+  data-dependent per-channel decay w_t = exp(-exp(w0 + lora_w(x))),
+  WKV state recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+  out_t = r_t (S_{t-1} + diag(u) k_t^T v_t), per-head group-norm, silu(g) gate;
+  channel-mix: squared-relu MLP with token-shift lerp.
+
+Both recurrences run under ``lax.scan`` over time (one HLO step body);
+the chunked-parallel formulation is a §Perf iteration. The scan carry is
+exactly the decode state, so train and serve share the cell code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, truncnorm
+
+Array = jnp.ndarray
+
+
+class RWKVState(NamedTuple):
+    wkv: Array  # (B, H, Dk, Dv)
+    x_tm: Array  # (B, d) previous token (time-mix shift)
+    x_cm: Array  # (B, d) previous token (channel-mix shift)
+
+
+def rwkv_heads(cfg):
+    hd = 64
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def rwkv_init(key, cfg, dtype, *, stacked=None) -> dict:
+    d, r = cfg.d_model, cfg.lora_rank
+    h, hd = rwkv_heads(cfg)
+    ks = jax.random.split(key, 12)
+    st = lambda *s: ((stacked,) + s) if stacked is not None else s
+    return {
+        # ddlerp: base mus for (r, w, k, v, g) plus a shared low-rank adapter
+        "mu_x": jnp.zeros(st(d), dtype),
+        "mu": jnp.zeros(st(5, d), dtype),
+        "ddlerp_a": truncnorm(ks[0], st(d, 5 * r), dtype, 0.02),
+        "ddlerp_b": truncnorm(ks[1], st(5, r, d), dtype, 0.02),
+        # decay: w0 + low-rank data-dependent part
+        "w0": jnp.full(st(d), -6.0, dtype),
+        "w_a": truncnorm(ks[2], st(d, 2 * r), dtype, 0.02),
+        "w_b": truncnorm(ks[3], st(2 * r, d), dtype, 0.02),
+        "u": truncnorm(ks[4], st(h, hd), dtype, 0.5),
+        "wr": dense_init(ks[5], d, (d,), dtype, stacked=stacked),
+        "wk": dense_init(ks[6], d, (d,), dtype, stacked=stacked),
+        "wv": dense_init(ks[7], d, (d,), dtype, stacked=stacked),
+        "wg": dense_init(ks[8], d, (d,), dtype, stacked=stacked),
+        "wo": dense_init(ks[9], d, (d,), dtype, stacked=stacked),
+        "ln_x_scale": jnp.ones(st(d), dtype),
+        "ln_x_bias": jnp.zeros(st(d), dtype),
+        # channel-mix
+        "cm_mu_k": jnp.zeros(st(d), dtype),
+        "cm_mu_r": jnp.zeros(st(d), dtype),
+        "cm_wk": dense_init(ks[10], d, (cfg.d_ff,), dtype, stacked=stacked),
+        "cm_wv": dense_init(ks[11], cfg.d_ff, (d,), dtype, stacked=stacked),
+        "cm_wr": dense_init(jax.random.fold_in(ks[10], 7), d, (d,), dtype, stacked=stacked),
+    }
+
+
+def _group_norm(x, scale, bias, h, eps=64e-5):
+    b, t, d = x.shape
+    xg = x.reshape(b, t, h, d // h).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, t, d) * scale + bias).astype(x.dtype)
+
+
+def rwkv_time_mix(cfg, p, x: Array, state: RWKVState):
+    """x: (B, T, d). Returns (out, new_state)."""
+    b, t, d = x.shape
+    h, hd = rwkv_heads(cfg)
+    r = cfg.lora_rank
+
+    x_prev = jnp.concatenate([state.x_tm[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xxx = x + xx * p["mu_x"]
+    dyn = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["ddlerp_a"]))
+    dyn = dyn.reshape(b, t, 5, r)
+    dyn = jnp.einsum("btfr,frd->btfd", dyn, p["ddlerp_b"])  # (B,T,5,d)
+    mix = p["mu"][None, None] + dyn
+    xr, xw, xk, xv, xg = [x + xx * mix[:, :, i] for i in range(5)]
+
+    rr = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(b, t, h, hd)
+    kk = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(b, t, h, hd)
+    vv = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(b, t, h, hd)
+    gg = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+
+    wdyn = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_a"]))
+    wdyn = jnp.einsum("btr,rd->btd", wdyn, p["w_b"])
+    w = jnp.exp(-jnp.exp((p["w0"] + wdyn).astype(jnp.float32)))  # (B,T,d) in (0,1)
+    w = w.reshape(b, t, h, hd)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32), s + u[None, :, :, None] * kv)
+        s = wt.astype(jnp.float32)[..., None] * s + kv
+        return s, out
+
+    xs = (
+        rr.transpose(1, 0, 2, 3),
+        kk.transpose(1, 0, 2, 3),
+        vv.transpose(1, 0, 2, 3),
+        w.transpose(1, 0, 2, 3),
+    )
+    s_final, outs = jax.lax.scan(step, state.wkv.astype(jnp.float32), xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, t, d).astype(x.dtype)
+    out = _group_norm(out, p["ln_x_scale"], p["ln_x_bias"], h)
+    out = jnp.einsum("btd,de->bte", out * gg, p["wo"])
+    new_state = RWKVState(s_final.astype(state.wkv.dtype), x[:, -1], state.x_cm)
+    return out, new_state
+
+
+def rwkv_channel_mix(cfg, p, x: Array, state: RWKVState):
+    x_prev = jnp.concatenate([state.x_cm[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["cm_mu_k"]
+    xr = x + xx * p["cm_mu_r"]
+    k = jnp.einsum("btd,df->btf", xk, p["cm_wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("btf,fd->btd", k, p["cm_wv"])
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cm_wr"])) * kv
+    return out, state._replace(x_cm=x[:, -1])
+
+
+def rwkv_init_state(cfg, batch: int, dtype) -> RWKVState:
+    h, hd = rwkv_heads(cfg)
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        x_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        x_cm=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba parallel branch)
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    h: Array  # (B, d_inner, N)
+    conv: Array  # (B, K-1, d_inner) causal-conv tail
+
+_CONV_K = 4
+
+
+def mamba_init(key, cfg, dtype, *, stacked=None) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    di = cfg.ssm_expand * d
+    ks = jax.random.split(key, 6)
+    st = lambda *s: ((stacked,) + s) if stacked is not None else s
+    return {
+        "in_proj": dense_init(ks[0], d, (2 * di,), dtype, stacked=stacked),
+        "conv_w": truncnorm(ks[1], st(_CONV_K, di), dtype, 0.2),
+        "x_proj": dense_init(ks[2], di, (2 * n + 1,), dtype, stacked=stacked),
+        "dt_bias": jnp.zeros(st(di), dtype),
+        "a_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), st(di, n)
+        ).astype(dtype),
+        "d_skip": jnp.ones(st(di), dtype),
+        "out_proj": dense_init(ks[4], di, (d,), dtype, stacked=stacked),
+    }
+
+
+def mamba_apply(cfg, p, x: Array, state: MambaState):
+    """x: (B, T, d) -> (out, new_state). Selective scan over T."""
+    b, t, d = x.shape
+    n = cfg.ssm_state
+    di = cfg.ssm_expand * d
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B,T,di)
+
+    # depthwise causal conv, kernel K, with carried tail for decode
+    pad = jnp.concatenate([state.conv, xs], axis=1)  # (B, K-1+T, di)
+    conv = sum(
+        pad[:, k : k + t] * p["conv_w"][k][None, None] for k in range(_CONV_K)
+    )
+    xs = jax.nn.silu(conv)
+    new_tail = pad[:, t:][:, -( _CONV_K - 1):]
+
+    proj = jnp.einsum("bte,ec->btc", xs, p["x_proj"])
+    dt = jax.nn.softplus(proj[..., :1] + p["dt_bias"][None, None])  # (B,T,di)
+    bb = proj[..., 1 : 1 + n]  # (B,T,N)
+    cc = proj[..., 1 + n :]  # (B,T,N)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di),(B,N),(B,N),(B,di)
+        da = jnp.exp(dt_t[..., None].astype(jnp.float32) * a[None])  # (B,di,N)
+        h = da * h + (dt_t[..., None] * x_t[..., None]).astype(jnp.float32) * b_t[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    xs_t = (
+        dt.transpose(1, 0, 2),
+        bb.transpose(1, 0, 2),
+        cc.transpose(1, 0, 2),
+        xs.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, state.h.astype(jnp.float32), xs_t)
+    y = ys.transpose(1, 0, 2).astype(x.dtype) + xs * p["d_skip"][None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, MambaState(h_final.astype(state.h.dtype), new_tail)
+
+
+def mamba_init_state(cfg, batch: int, dtype) -> MambaState:
+    di = cfg.ssm_expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, _CONV_K - 1, di), dtype),
+    )

@@ -1,0 +1,373 @@
+"""Layer blocks and scan-over-layers stacks for every assigned family.
+
+Every stack runs its (stacked-leaf) layer parameters through one
+``jax.lax.scan`` with ``jax.checkpoint`` on the body, so HLO size and
+compile time are O(1) in depth and activation memory is O(sqrt-ish) via
+rematerialization — required for 100-layer archs on the 1-core compile
+budget and for the 512-device dry-run (DESIGN.md §5).
+
+Mixed layer patterns (Gemma-2 local/global alternation, Hymba's mostly
+local pattern) pass a per-layer flag through scan ``xs`` and select between
+two precomputed masks with ``lax.select`` — no double compute. The local
+band mask is built by the paper's dilation primitive (core.masks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn, ssm
+from repro.models.layers import norm_apply, norm_init
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Per-layer blocks (params are single-layer slices inside scan)
+# ---------------------------------------------------------------------------
+
+
+def dense_block(cfg, p, x, *, mask, positions):
+    x = x + attn.self_attention(
+        cfg, p["attn"], norm_apply(cfg, x, p["ln_attn"]), mask=mask, positions=positions
+    )
+    x = x + ffn.mlp_apply(cfg, p["mlp"], norm_apply(cfg, x, p["ln_mlp"]))
+    return x
+
+
+def moe_block(cfg, p, x, *, mask, positions):
+    x = x + attn.self_attention(
+        cfg, p["attn"], norm_apply(cfg, x, p["ln_attn"]), mask=mask, positions=positions
+    )
+    out, aux = ffn.moe_apply(cfg, p["moe"], norm_apply(cfg, x, p["ln_mlp"]))
+    return x + out, aux
+
+
+def rwkv_block(cfg, p, x, state: ssm.RWKVState):
+    out, state = ssm.rwkv_time_mix(cfg, p["tm"], norm_apply(cfg, x, p["ln_tm"]), state)
+    x = x + out
+    out, state = ssm.rwkv_channel_mix(cfg, p["cm"], norm_apply(cfg, x, p["ln_cm"]), state)
+    return x + out, state
+
+
+def hymba_block(cfg, p, x, *, mask, positions, mamba_state):
+    n = norm_apply(cfg, x, p["ln_attn"])
+    a = attn.self_attention(cfg, p["attn"], n, mask=mask, positions=positions)
+    m, mamba_state = ssm.mamba_apply(cfg, p["mamba"], n, mamba_state)
+    fused = 0.5 * (
+        norm_apply(cfg, a, p["ln_a_out"]) + norm_apply(cfg, m, p["ln_m_out"])
+    )
+    x = x + fused
+    x = x + ffn.mlp_apply(cfg, p["mlp"], norm_apply(cfg, x, p["ln_mlp"]))
+    return x, mamba_state
+
+
+def encdec_block(cfg, p, x, *, self_mask, ctx, positions):
+    x = x + attn.self_attention(
+        cfg, p["attn"], norm_apply(cfg, x, p["ln_attn"]), mask=self_mask, positions=positions
+    )
+    x = x + attn.cross_attention(cfg, p["xattn"], norm_apply(cfg, x, p["ln_xattn"]), ctx)
+    x = x + ffn.mlp_apply(cfg, p["mlp"], norm_apply(cfg, x, p["ln_mlp"]))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Layer-parameter initializers (stacked leading dim = num_layers)
+# ---------------------------------------------------------------------------
+
+
+def _block_init(cfg, key, dtype, n_layers: int, *, kind: str) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {"ln_attn": norm_init(cfg, dtype, stacked=n_layers),
+         "ln_mlp": norm_init(cfg, dtype, stacked=n_layers)}
+    p["attn"] = attn.attn_init(ks[0], cfg, dtype, stacked=n_layers)
+    if kind == "dense":
+        p["mlp"] = ffn.mlp_init(ks[1], cfg, dtype, stacked=n_layers)
+    elif kind == "moe":
+        p["moe"] = ffn.moe_init(ks[1], cfg, dtype, stacked=n_layers)
+    elif kind == "hymba":
+        p["mlp"] = ffn.mlp_init(ks[1], cfg, dtype, stacked=n_layers)
+        p["mamba"] = ssm.mamba_init(ks[2], cfg, dtype, stacked=n_layers)
+        p["ln_a_out"] = norm_init(cfg, dtype, stacked=n_layers)
+        p["ln_m_out"] = norm_init(cfg, dtype, stacked=n_layers)
+    elif kind == "encdec":
+        p["mlp"] = ffn.mlp_init(ks[1], cfg, dtype, stacked=n_layers)
+        p["xattn"] = attn.attn_init(ks[3], cfg, dtype, stacked=n_layers)
+        p["ln_xattn"] = norm_init(cfg, dtype, stacked=n_layers)
+    return p
+
+
+def stack_init(cfg, key, dtype, n_layers: int, *, kind: str) -> dict:
+    if kind == "rwkv":
+        ks = jax.random.split(key, 2)
+        tm = ssm.rwkv_init(ks[0], cfg, dtype, stacked=n_layers)
+        cm = {k: tm.pop(k) for k in list(tm) if k.startswith("cm_")}
+        return {
+            "ln_tm": norm_init(cfg, dtype, stacked=n_layers),
+            "ln_cm": norm_init(cfg, dtype, stacked=n_layers),
+            "tm": tm,
+            "cm": cm,
+        }
+    return _block_init(cfg, key, dtype, n_layers, kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# Masks and layer patterns
+# ---------------------------------------------------------------------------
+
+
+def layer_is_local(cfg) -> Optional[Array]:
+    """Per-layer bool flags for mixed local/global patterns (None = uniform)."""
+    L = cfg.num_layers
+    if cfg.layer_pattern == "local_global":
+        return jnp.arange(L) % 2 == 0  # even layers local (Gemma-2 style)
+    if cfg.layer_pattern == "local":
+        # Hymba: global attention only at first / middle / last layer
+        glob = jnp.zeros(L, bool).at[jnp.array([0, L // 2, L - 1])].set(True)
+        return ~glob
+    return None
+
+
+def train_masks(cfg, s: int):
+    """(global_mask, local_mask_or_None) for a training step of seq s."""
+    g = attn.causal_mask(s, s)
+    if cfg.local_window is None:
+        return g, None
+    l = attn.causal_mask(s, s, window=cfg.local_window)
+    return g, l
+
+
+# ---------------------------------------------------------------------------
+# Scan-over-layers stacks (training / full-sequence forward)
+# ---------------------------------------------------------------------------
+
+
+# Activation-sharding hook: launch/dryrun.py (and real launchers) install a
+# PartitionSpec here so the remat-saved layer-scan carry is sequence-sharded
+# over the TP axis (Megatron-SP analog); None = no constraint (single host).
+_ACT_SPEC = None
+
+# Unroll hook: benchmarks/roofline.py probes lower tiny-depth configs with
+# the layer scan *unrolled* so XLA cost_analysis counts every layer (a scan
+# body is otherwise counted once regardless of trip count). Never set for
+# real runs.
+_UNROLL = False
+
+
+def set_activation_spec(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def set_unroll(v: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(v)
+
+
+def unrolled() -> bool:
+    return _UNROLL
+
+
+# Banded-local-attention hook (§Perf iteration C): when set, local layers of
+# local_global-pattern models compute block-banded attention (O(S*2W))
+# instead of masked full attention (O(S^2)).
+_BANDED = False
+
+
+def set_banded_local(v: bool) -> None:
+    global _BANDED
+    _BANDED = bool(v)
+
+
+# Remat-policy hook (§Perf iteration E): "full" rematerializes everything in
+# the backward pass (min memory, ~1.5x forward flops extra); "dots" saves
+# matmul outputs (jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+# trading saved-activation bytes for recompute flops.
+_REMAT_POLICY = "full"
+
+
+def set_remat_policy(name: str) -> None:
+    global _REMAT_POLICY
+    assert name in ("full", "dots")
+    _REMAT_POLICY = name
+
+
+def _checkpoint(fn):
+    if _REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _constrain(x):
+    if _ACT_SPEC is not None and getattr(x, "ndim", 0) == 3 and x.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+def _scan(body, carry, xs, n_layers):
+    def wrapped(c, x):
+        if isinstance(c, tuple):
+            c = (_constrain(c[0]),) + c[1:]
+        else:
+            c = _constrain(c)
+        return body(c, x)
+
+    return jax.lax.scan(
+        _checkpoint(wrapped), carry, xs, length=n_layers, unroll=_UNROLL
+    )
+
+
+def decoder_stack(cfg, stacked, x, *, positions, kind: str):
+    """Full-seq forward for dense / moe / hymba / rwkv stacks.
+
+    Returns (x, aux_loss, final_states) — states only for stateful kinds.
+    """
+    s = x.shape[1]
+    gmask, lmask = train_masks(cfg, s)
+    is_local = layer_is_local(cfg)
+
+    if kind == "rwkv":
+        state0 = ssm.rwkv_init_state(cfg, x.shape[0], x.dtype)
+
+        def body(x, layer_p):
+            x, _ = rwkv_block(cfg, layer_p, x, state0)
+            return x, None
+
+        x, _ = _scan(body, x, stacked, cfg.num_layers)
+        return x, jnp.float32(0.0)
+
+    if kind == "hymba":
+        mstate0 = ssm.mamba_init_state(cfg, x.shape[0], x.dtype)
+
+        def body(x, inp):
+            layer_p, loc = inp
+            mask = jax.lax.select(loc, lmask, gmask) if lmask is not None else gmask
+            x, _ = hymba_block(
+                cfg, layer_p, x, mask=mask, positions=positions, mamba_state=mstate0
+            )
+            return x, None
+
+        x, _ = _scan(body, x, (stacked, is_local), cfg.num_layers)
+        return x, jnp.float32(0.0)
+
+    if kind == "moe":
+        def body(carry, layer_p):
+            x, aux = carry
+            x, a = moe_block(cfg, layer_p, x, mask=gmask, positions=positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = _scan(body, (x, jnp.float32(0.0)), stacked, cfg.num_layers)
+        return x, aux / cfg.num_layers
+
+    # dense (with optional local/global alternation)
+    if (
+        kind == "dense"
+        and cfg.layer_pattern == "local_global"
+        and _BANDED
+        and cfg.num_layers % 2 == 0
+        and s % (cfg.local_window or s + 1) == 0
+    ):
+        # §Perf iteration C: scan over (local, global) layer PAIRS so the
+        # local layer runs block-banded attention with no select and no
+        # double compute. Gemma-2 alternates strictly, so pairing is exact.
+        paired = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers // 2, 2) + a.shape[1:]), stacked
+        )
+
+        def body(x, pair_p):
+            p_loc = jax.tree.map(lambda a: a[0], pair_p)
+            p_glob = jax.tree.map(lambda a: a[1], pair_p)
+            x = x + attn.local_attention_banded(
+                cfg, p_loc["attn"], norm_apply(cfg, x, p_loc["ln_attn"]),
+                positions=positions, window=cfg.local_window,
+            )
+            x = x + ffn.mlp_apply(cfg, p_loc["mlp"], norm_apply(cfg, x, p_loc["ln_mlp"]))
+            x = dense_block(cfg, p_glob, x, mask=gmask, positions=positions)
+            return x, None
+
+        x, _ = _scan(body, x, paired, cfg.num_layers // 2)
+        return x, jnp.float32(0.0)
+
+    if is_local is None:
+        def body(x, layer_p):
+            return dense_block(cfg, layer_p, x, mask=gmask, positions=positions), None
+
+        x, _ = _scan(body, x, stacked, cfg.num_layers)
+    else:
+        def body(x, inp):
+            layer_p, loc = inp
+            mask = jax.lax.select(loc, lmask, gmask)
+            return dense_block(cfg, layer_p, x, mask=mask, positions=positions), None
+
+        x, _ = _scan(body, x, (stacked, is_local), cfg.num_layers)
+    return x, jnp.float32(0.0)
+
+
+def encoder_stack(cfg, stacked, x):
+    """Bidirectional encoder (Whisper): full mask, no RoPE (sinusoid added
+    by caller)."""
+    mask = jnp.ones((1, 1, 1, x.shape[1], x.shape[1]), bool)
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(x, layer_p):
+        return dense_block(cfg, layer_p, x, mask=mask, positions=positions), None
+
+    x, _ = _scan(body, x, stacked, cfg.num_encoder_layers)
+    return x
+
+
+def encdec_decoder_stack(cfg, stacked, x, ctx, *, positions):
+    s = x.shape[1]
+    mask = attn.causal_mask(s, s)
+
+    def body(x, layer_p):
+        return encdec_block(cfg, layer_p, x, self_mask=mask, ctx=ctx, positions=positions), None
+
+    x, _ = _scan(body, x, stacked, cfg.num_layers)
+    return x, jnp.float32(0.0)
+
+
+def vlm_stack(cfg, stacked, x, image_ctx, *, positions):
+    """Llama-3.2-Vision: scan over groups of (cross_attn_every - 1) self
+    layers + 1 self-layer followed by image cross-attention."""
+    s = x.shape[1]
+    mask = attn.causal_mask(s, s)
+    per = cfg.cross_attn_every
+    groups = cfg.num_layers // per
+
+    def body(x, group_p):
+        for i in range(per - 1):
+            layer_p = jax.tree.map(lambda a: a[i], group_p["self"])
+            x = dense_block(cfg, layer_p, x, mask=mask, positions=positions)
+        x = dense_block(cfg, group_p["last_self"], x, mask=mask, positions=positions)
+        x = x + attn.cross_attention(
+            cfg, group_p["xattn"], norm_apply(cfg, x, group_p["ln_xattn"]), image_ctx
+        )
+        return x, None
+
+    x, _ = _scan(body, x, stacked, groups)
+    return x, jnp.float32(0.0)
+
+
+def vlm_stack_init(cfg, key, dtype) -> dict:
+    per = cfg.cross_attn_every
+    groups = cfg.num_layers // per
+    ks = jax.random.split(key, 4)
+    inner = _block_init(cfg, ks[0], dtype, groups, kind="dense")
+    # add an inner (per-1) dim by re-initializing with groups*(per-1) and reshaping
+    flat = _block_init(cfg, ks[1], dtype, groups * (per - 1), kind="dense")
+    self_p = jax.tree.map(
+        lambda a: a.reshape((groups, per - 1) + a.shape[1:]), flat
+    )
+    return {
+        "self": self_p,
+        "last_self": inner,
+        "xattn": attn.attn_init(ks[2], cfg, dtype, stacked=groups),
+        "ln_xattn": norm_init(cfg, dtype, stacked=groups),
+    }

@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, gradient clipping, compression."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm, global_norm
+from repro.optim.compress import compressed_psum, dequantize_int8, quantize_int8
+from repro.optim.schedule import warmup_cosine

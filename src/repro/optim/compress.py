@@ -1,0 +1,50 @@
+"""Int8 gradient compression for the thin cross-pod (DCN) axis.
+
+At 512+ chips the intra-pod ICI all-reduce is cheap relative to the
+inter-pod DCN hop, so we compress only the "pod"-axis reduction:
+per-chunk symmetric int8 quantization, an int8 ``all_gather`` over the pod
+axis (+ f32 scales), and a local dequantize-sum. For a pod axis of size P
+this moves N + 4N/chunk bytes instead of ~2·4N for a ring all-reduce in
+f32 — an ~8x wire-byte reduction at P=2.
+
+Used inside ``shard_map`` (see train.loop cross-pod hook and
+tests/test_compress.py); numerics: relative error bounded by ~1/254 per
+chunk, which is far below gradient noise at batch 256 (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, *, chunk: int = 1024):
+    """Symmetric per-chunk int8 quantization. Returns (q, scales, shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = -flat.size % chunk
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, *, chunk: int = 1024):
+    """Mean-reduce ``x`` over ``axis_name`` with int8 wire format.
+
+    all_gather(int8) + local dequant-sum == psum, but at ~1/8 the DCN bytes.
+    Must be called inside shard_map/pmap with ``axis_name`` bound.
+    """
+    q, scale = quantize_int8(x, chunk=chunk)
+    qs = jax.lax.all_gather(q, axis_name)          # (P, nchunk, chunk) int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (P, nchunk, 1) f32
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)  # (nchunk, chunk)
+    n = jax.lax.psum(1, axis_name)
+    return (total.reshape(-1)[: x.size].reshape(x.shape) / n).astype(x.dtype)

@@ -1,0 +1,13 @@
+"""Learning-rate schedules (warmup + cosine decay) as pure step -> lr fns."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,2 @@
+"""Serving substrate: batched prefill + generate over the KV cache."""
+from repro.serve.engine import generate, prefill

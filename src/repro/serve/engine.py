@@ -1,0 +1,71 @@
+"""Batched decode engine: prefill + sampled generation over the KV cache.
+
+``prefill`` runs the decode cell under ``lax.scan`` across the prompt
+(one HLO step body — compile-cheap; a chunked full-seq prefill is a §Perf
+note). ``generate`` continues with temperature/greedy sampling. Both are
+jit-compatible and mesh-aware: the caller passes sharded params/cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import DecodeCache, init_decode_cache, prefill_cross_kv, serve_step
+
+
+def prefill(cfg: ModelConfig, params, cache: DecodeCache, prompt: jnp.ndarray):
+    """prompt: (B, P) i32. Returns (last_logits, cache_after_prompt)."""
+
+    def body(carry, tok_pos):
+        cache = carry
+        tok, pos = tok_pos
+        logits, cache = serve_step(cfg, params, cache, tok[:, None], pos)
+        return cache, logits[:, 0]
+
+    toks = prompt.T  # (P, B)
+    poss = jnp.arange(prompt.shape[1], dtype=jnp.int32)
+    cache, logits_seq = jax.lax.scan(body, cache, (toks, poss))
+    return logits_seq[-1], cache
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompt: jnp.ndarray,
+    *,
+    max_new_tokens: int = 16,
+    kv_len: Optional[int] = None,
+    temperature: float = 0.0,
+    seed: int = 0,
+    context: Optional[jnp.ndarray] = None,
+):
+    """Greedy/temperature generation. context = encoder frames (Whisper) or
+    image embeddings (VLM); None otherwise."""
+    b, p = prompt.shape
+    kv_len = kv_len or (p + max_new_tokens)
+    cache = init_decode_cache(cfg, b, kv_len)
+    if context is not None:
+        cache = prefill_cross_kv(cfg, params, cache, context)
+    logits, cache = prefill(cfg, params, cache, prompt)
+    key = jax.random.PRNGKey(seed)
+
+    def sample(logits, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def body(carry, i):
+        cache, logits, key = carry
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        logits, cache = serve_step(cfg, params, cache, tok[:, None], p + i)
+        return (cache, logits[:, 0], key), tok
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (cache, logits, key), jnp.arange(max_new_tokens, dtype=jnp.int32)
+    )
+    return toks.T  # (B, max_new_tokens)

@@ -1,0 +1,2 @@
+"""Training loop substrate (fault tolerance, microbatching, watchdog)."""
+from repro.train.loop import Trainer, TrainLoopConfig, make_train_step

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+decode step on CPU, asserting shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ARCH_IDS, get_config
+from repro.models.model import (
+    forward_train,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill_cross_kv,
+    serve_step,
+)
+from repro.optim import adamw_init, adamw_update
+
+B, S = 2, 16
+
+
+def make_batch(cfg):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)),
+    }
+    if cfg.family == "encdec":
+        batch["encoder_frames"] = jnp.asarray(
+            0.01 * rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = jnp.asarray(
+            0.01 * rng.standard_normal((B, cfg.num_image_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits, aux = forward_train(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_descends_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def step(params, opt):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt = adamw_update(grads, opt, params, lr=1e-3, weight_decay=0.0)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(4):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]  # same batch: must descend
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_decode_cache(cfg, B, 8)
+    if cfg.family == "encdec":
+        ctx = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        cache = prefill_cross_kv(cfg, params, cache, ctx)
+    if cfg.family == "vlm":
+        ctx = jnp.zeros((B, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        cache = prefill_cross_kv(cfg, params, cache, ctx)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for pos in range(3):
+        logits, cache = serve_step(cfg, params, cache, tok, jnp.int32(pos))
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert not np.isnan(np.asarray(logits, np.float32)).any()
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-7b", "hymba-1.5b"])
+def test_decode_matches_teacher_forcing(arch):
+    """serve_step chained over a prompt must agree with full-seq forward."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 6), dtype=np.int32))
+    full_logits, _ = forward_train(cfg, params, {"tokens": toks, "labels": toks})
+    cache = init_decode_cache(cfg, B, 8)
+    outs = []
+    for t in range(6):
+        lg, cache = serve_step(cfg, params, cache, toks[:, t : t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_param_counts_match_spec():
+    """Full-config param counts are in the right ballpark of the model names."""
+    expected = {
+        "gemma-7b": (7e9, 0.4),        # (target, rel tolerance)
+        "gemma2-2b": (2.6e9, 0.4),
+        "qwen2.5-3b": (3e9, 0.45),
+        "qwen1.5-0.5b": (0.5e9, 0.4),
+        "rwkv6-7b": (7e9, 0.4),
+        "grok-1-314b": (314e9, 0.25),
+        "dbrx-132b": (132e9, 0.25),
+        "whisper-medium": (0.76e9, 0.5),
+        "hymba-1.5b": (1.5e9, 0.45),
+        "llama-3.2-vision-90b": (90e9, 0.25),
+    }
+    for arch, (target, tol) in expected.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, f"{arch}: {n:.3e} vs {target:.3e}"

@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: shape x dtype x window sweeps.
+
+All kernels run in interpret mode (CPU container; TPU is the lowering
+target). Results must be bit-exact for integer dtypes and exactly equal
+for floats (min/max are exact ops).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    dilate2d_tpu,
+    erode2d_tpu,
+    gradient_1d_tpu,
+    morph_1d_tpu,
+    morph_linear_sublane,
+    morph_vhgw_sublane,
+    transpose_tiled,
+)
+from repro.kernels.ref import gradient_1d_ref, morph_1d_ref, transpose_ref
+from repro.core import dilate_naive, erode_naive
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape, dtype):
+    if np.issubdtype(dtype, np.floating):
+        return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+    info = np.iinfo(dtype)
+    return jnp.asarray(RNG.integers(info.min, info.max, shape, dtype=dtype))
+
+
+# ------------------------------------------------------------------ transpose
+@pytest.mark.parametrize("shape", [(8, 8), (16, 16), (128, 128), (130, 257), (600, 800)])
+@pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.float32])
+def test_transpose_kernel(shape, dtype):
+    x = rand(shape, dtype)
+    got = np.asarray(transpose_tiled(x))
+    np.testing.assert_array_equal(got, np.asarray(transpose_ref(x)))
+
+
+@pytest.mark.parametrize("tile", [8, 16, 128])
+def test_transpose_paper_tiles(tile):
+    """The paper's 8x8.16 and 16x16.8 cases, plus the TPU-native 128 tile."""
+    dtype = {8: np.uint16, 16: np.uint8, 128: np.float32}[tile]
+    x = rand((tile, tile), dtype)
+    got = np.asarray(transpose_tiled(x, tile=tile))
+    np.testing.assert_array_equal(got, np.asarray(x).T)
+
+
+def test_transpose_involution():
+    x = rand((100, 259), np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(transpose_tiled(transpose_tiled(x))), np.asarray(x)
+    )
+
+
+# ------------------------------------------------------------- morph kernels
+@pytest.mark.parametrize("kernel", [morph_linear_sublane, morph_vhgw_sublane])
+@pytest.mark.parametrize("w", [3, 9, 31, 61])
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_morph_kernels_vs_oracle(kernel, w, op):
+    x = rand((137, 201), np.uint8)
+    got = np.asarray(kernel(x, w=w, op=op))
+    np.testing.assert_array_equal(got, np.asarray(morph_1d_ref(x, w, axis=0, op=op)))
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.int8, np.int32, np.float32])
+def test_morph_kernels_dtypes(dtype):
+    x = rand((64, 128), dtype)
+    for kernel in (morph_linear_sublane, morph_vhgw_sublane):
+        got = np.asarray(kernel(x, w=5, op="min"))
+        np.testing.assert_array_equal(got, np.asarray(morph_1d_ref(x, 5, axis=0, op="min")))
+
+
+@pytest.mark.parametrize("h,wd", [(37, 53), (600, 800), (128, 130)])
+def test_morph_kernel_shapes(h, wd):
+    x = rand((h, wd), np.uint8)
+    for w in (3, 15):
+        for axis in (0, 1):
+            got = np.asarray(morph_1d_tpu(x, w, axis=axis, op="max"))
+            np.testing.assert_array_equal(
+                got, np.asarray(morph_1d_ref(x, w, axis=axis, op="max"))
+            )
+
+
+def test_lane_axis_strategies_agree():
+    x = rand((96, 160), np.uint8)
+    a = np.asarray(morph_1d_tpu(x, 7, axis=1, op="min", lane_strategy="transpose_kernel"))
+    b = np.asarray(morph_1d_tpu(x, 7, axis=1, op="min", lane_strategy="xla"))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("se", [(3, 3), (5, 9), (31, 7)])
+def test_2d_kernels_vs_naive(se):
+    x = rand((97, 141), np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(erode2d_tpu(x, se)), np.asarray(erode_naive(x, se))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(dilate2d_tpu(x, se)), np.asarray(dilate_naive(x, se))
+    )
+
+
+def test_fused_gradient_kernel():
+    x = rand((80, 144), np.uint8)
+    for w in (3, 9, 21):
+        got = np.asarray(gradient_1d_tpu(x, w, axis=0))
+        np.testing.assert_array_equal(got, np.asarray(gradient_1d_ref(x, w, axis=0)))
+
+
+def test_fused_gradient_float():
+    x = rand((64, 128), np.float32)
+    got = np.asarray(gradient_1d_tpu(x, 5, axis=0))
+    np.testing.assert_allclose(got, np.asarray(gradient_1d_ref(x, 5, axis=0)), rtol=1e-6)

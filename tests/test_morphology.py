@@ -1,0 +1,96 @@
+"""Core morphology: every algorithm vs the naive oracle, all dtypes/axes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    dilate,
+    dilate_naive,
+    erode,
+    erode_naive,
+    linear_1d,
+    linear_1d_paired,
+    linear_1d_tree,
+    morph_1d,
+    vhgw_1d,
+)
+from repro.core.types import as_op
+
+RNG = np.random.default_rng(42)
+
+
+def ref_1d(x: np.ndarray, w: int, axis: int, op: str) -> np.ndarray:
+    o = as_op(op)
+    wing = (w - 1) // 2
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (wing, wing)
+    xp = np.pad(x, pads, constant_values=np.asarray(o.neutral(x.dtype)))
+    out = None
+    red = np.minimum if o.name == "min" else np.maximum
+    for k in range(w):
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(k, k + x.shape[axis])
+        v = xp[tuple(sl)]
+        out = v if out is None else red(out, v)
+    return out
+
+
+METHODS = {
+    "vhgw": vhgw_1d,
+    "linear": linear_1d,
+    "linear_paired": linear_1d_paired,
+    "linear_tree": linear_1d_tree,
+}
+
+
+@pytest.mark.parametrize("method", list(METHODS))
+@pytest.mark.parametrize("w", [1, 3, 5, 9, 31, 63])
+@pytest.mark.parametrize("axis", [-1, -2])
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_1d_matches_oracle(method, w, axis, op):
+    x = RNG.integers(0, 256, (3, 41, 57), dtype=np.uint8)
+    got = np.asarray(METHODS[method](jnp.asarray(x), w, axis=axis, op=op))
+    np.testing.assert_array_equal(got, ref_1d(x, w, axis % 3, op))
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.int8, np.int32, np.float32])
+def test_dtype_sweep(dtype):
+    if np.issubdtype(dtype, np.floating):
+        x = RNG.standard_normal((17, 33)).astype(dtype)
+    else:
+        info = np.iinfo(dtype)
+        x = RNG.integers(info.min, info.max, (17, 33), dtype=dtype)
+    for w in (3, 9):
+        for axis in (-1, -2):
+            got = np.asarray(vhgw_1d(jnp.asarray(x), w, axis=axis, op="min"))
+            np.testing.assert_array_equal(got, ref_1d(x, w, axis % 2, "min"))
+
+
+def test_bfloat16():
+    x = jnp.asarray(RNG.standard_normal((16, 32)), jnp.bfloat16)
+    a = np.asarray(vhgw_1d(x, 5, op="max").astype(jnp.float32))
+    b = np.asarray(linear_1d(x, 5, op="max").astype(jnp.float32))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("se", [(3, 3), (1, 9), (9, 1), (5, 7), (31, 3)])
+def test_2d_separable_equals_naive(se):
+    x = jnp.asarray(RNG.integers(0, 256, (2, 43, 61), dtype=np.uint8))
+    np.testing.assert_array_equal(np.asarray(erode(x, se)), np.asarray(erode_naive(x, se)))
+    np.testing.assert_array_equal(np.asarray(dilate(x, se)), np.asarray(dilate_naive(x, se)))
+
+
+def test_hybrid_dispatch_matches_each_method():
+    x = jnp.asarray(RNG.integers(0, 256, (64, 80), dtype=np.uint8))
+    for w in (3, 15, 33, 65, 91):
+        want = ref_1d(np.asarray(x), w, 0, "min")
+        got = np.asarray(morph_1d(x, w, axis=0, op="min", method="auto"))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_even_window_rejected():
+    x = jnp.zeros((8, 8), jnp.uint8)
+    with pytest.raises(ValueError):
+        vhgw_1d(x, 4)
+    with pytest.raises(ValueError):
+        erode(x, (2, 3))

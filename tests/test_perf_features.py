@@ -1,0 +1,129 @@
+"""Correctness tests for the §Perf hillclimb features: banded local
+attention, int8 KV cache, serve-mode shardings."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.models import attention as A
+from repro.models import transformer as tfm
+from repro.models.config import get_config
+from repro.models.model import (
+    forward_train,
+    init_decode_cache,
+    init_params,
+    serve_step,
+)
+
+
+def test_banded_equals_masked_full_attention():
+    cfg = dataclasses.replace(get_config("gemma2-2b").reduced(), local_window=8)
+    p = A.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(32)[None], (2, 32))
+    full = A.self_attention(
+        cfg, p, x, mask=A.causal_mask(32, 32, window=8), positions=pos)
+    banded = A.local_attention_banded(cfg, p, x, positions=pos, window=8)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_banded_fallback_when_not_divisible():
+    cfg = dataclasses.replace(get_config("gemma2-2b").reduced(), local_window=8)
+    p = A.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (2, 12))
+    out = A.local_attention_banded(cfg, p, x, positions=pos, window=8)
+    want = A.self_attention(
+        cfg, p, x, mask=A.causal_mask(12, 12, window=8), positions=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_banded_model_forward_matches_baseline():
+    cfg = get_config("gemma2-2b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    base, _ = forward_train(cfg, params, batch)
+    tfm.set_banded_local(True)
+    try:
+        opt, _ = forward_train(cfg, params, batch)
+    finally:
+        tfm.set_banded_local(False)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma2-2b", "dbrx-132b"])
+def test_int8_kv_decode_matches_bf16(arch):
+    cfg = get_config(arch).reduced()
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 6), dtype=np.int32))
+    c_ref = init_decode_cache(cfg, 2, 8)
+    c_q = init_decode_cache(cfg, 2, 8, kv_cache_dtype="int8")
+    assert c_q.k.dtype == jnp.int8
+    for t in range(6):
+        lr, c_ref = serve_step(cfg, p, c_ref, toks[:, t:t+1], jnp.int32(t))
+        lq, c_q = serve_step(cfg, p, c_q, toks[:, t:t+1], jnp.int32(t))
+    lr = np.asarray(lr, np.float32)
+    lq = np.asarray(lq, np.float32)
+    rel = np.abs(lr - lq).max() / (np.abs(lr).max() + 1e-9)
+    assert rel < 0.05
+    assert (lr.argmax(-1) == lq.argmax(-1)).mean() > 0.9
+
+
+def test_serve_shardings_strip_dp():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    spec = P(None, ("data",), "model")
+    assert shd._strip_dp(spec, ("data",)) == P(None, None, "model")
+    # mixed tuple axis partially outside dp is preserved
+    assert shd._strip_dp(P(("data", "model")), ("data",)) == P(("data", "model"))
+
+
+def test_serve_shardings_budget_gate():
+    """Small model replicates over DP at serve; huge model keeps FSDP."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    small = {"layers": {"mlp": {"w_gate": jax.ShapeDtypeStruct((8, 8), jnp.bfloat16)}}}
+    sh = shd.tree_shardings(small, mesh, serve=True)
+    assert sh["layers"]["mlp"]["w_gate"].spec == P(None, "model")  # DP stripped, TP kept
+    sh_train = shd.tree_shardings(small, mesh, serve=False)
+    assert sh_train["layers"]["mlp"]["w_gate"].spec == P("data", "model")
+    huge = {"layers": {"mlp": {"w_gate": jax.ShapeDtypeStruct(
+        (1 << 20, 1 << 14), jnp.bfloat16)}}}  # 32 GB > budget
+    sh2 = shd.tree_shardings(huge, mesh, serve=True)
+    assert sh2["layers"]["mlp"]["w_gate"].spec == P("data", "model")  # FSDP kept
+
+
+def test_remat_policy_value_neutral():
+    """§Perf iteration E: 'dots' remat must not change loss or grads."""
+    import jax
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    from repro.models.model import loss_fn
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    l1, _ = loss_fn(cfg, params, batch)
+    g1 = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    tfm.set_remat_policy("dots")
+    try:
+        l2, _ = loss_fn(cfg, params, batch)
+        g2 = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    finally:
+        tfm.set_remat_policy("full")
+    assert abs(float(l1) - float(l2)) < 1e-6
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2))]
+    assert max(diffs) < 1e-6

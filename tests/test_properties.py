@@ -1,0 +1,108 @@
+"""Hypothesis property tests: the lattice-algebra invariants of morphology.
+
+These are the system's mathematical invariants (the paper relies on all of
+them implicitly): duality, monotonicity, extensivity/anti-extensivity,
+idempotence of opening/closing, separability commutation, and
+method-equivalence (vHGW == linear == tree for arbitrary inputs/windows).
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    closing,
+    dilate,
+    erode,
+    gradient,
+    linear_1d,
+    linear_1d_tree,
+    opening,
+    vhgw_1d,
+)
+
+shapes = st.tuples(st.integers(4, 24), st.integers(4, 24))
+windows = st.integers(0, 6).map(lambda k: 2 * k + 1)  # odd 1..13
+
+
+def arr(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=shapes, w=windows, seed=st.integers(0, 2**31))
+def test_method_equivalence(shape, w, seed):
+    x = arr(shape, seed)
+    a = np.asarray(vhgw_1d(x, w, axis=-1, op="min"))
+    b = np.asarray(linear_1d(x, w, axis=-1, op="min"))
+    c = np.asarray(linear_1d_tree(x, w, axis=-1, op="min"))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, w=windows, seed=st.integers(0, 2**31))
+def test_duality(shape, w, seed):
+    """erode(x) == 255 - dilate(255 - x) for u8 (min-max duality)."""
+    x = arr(shape, seed)
+    e = np.asarray(erode(x, (w, w)))
+    d = np.asarray(dilate(255 - x, (w, w)))
+    np.testing.assert_array_equal(e, 255 - d)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, w=windows.filter(lambda w: w > 1), seed=st.integers(0, 2**31))
+def test_extensivity(shape, w, seed):
+    """erode <= x <= dilate; opening <= x <= closing (flat SE w/ anchor)."""
+    x = arr(shape, seed)
+    assert bool(jnp.all(erode(x, (w, w)) <= x))
+    assert bool(jnp.all(dilate(x, (w, w)) >= x))
+    assert bool(jnp.all(opening(x, (w, w)) <= x))
+    assert bool(jnp.all(closing(x, (w, w)) >= x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, w=windows, seed=st.integers(0, 2**31))
+def test_idempotence(shape, w, seed):
+    """opening(opening(x)) == opening(x); same for closing."""
+    x = arr(shape, seed)
+    o = opening(x, (w, w))
+    np.testing.assert_array_equal(np.asarray(opening(o, (w, w))), np.asarray(o))
+    c = closing(x, (w, w))
+    np.testing.assert_array_equal(np.asarray(closing(c, (w, w))), np.asarray(c))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31),
+       w1=windows, w2=windows)
+def test_separability_commutes(shape, seed, w1, w2):
+    """H-pass then W-pass == W-pass then H-pass."""
+    x = arr(shape, seed)
+    a = vhgw_1d(vhgw_1d(x, w1, axis=-2, op="min"), w2, axis=-1, op="min")
+    b = vhgw_1d(vhgw_1d(x, w2, axis=-1, op="min"), w1, axis=-2, op="min")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, w=windows, seed=st.integers(0, 2**31))
+def test_monotonicity(shape, w, seed):
+    """x <= y pointwise => erode(x) <= erode(y)."""
+    x = arr(shape, seed)
+    y = jnp.minimum(255, x.astype(jnp.int32) + 10).astype(jnp.uint8)
+    assert bool(jnp.all(erode(x, (w, w)) <= erode(y, (w, w))))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, w=windows, seed=st.integers(0, 2**31))
+def test_gradient_nonnegative(shape, w, seed):
+    x = arr(shape, seed)
+    assert bool(jnp.all(gradient(x, (w, w)) >= 0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, w=windows, seed=st.integers(0, 2**31))
+def test_constant_image_fixed_point(shape, w, seed):
+    c = int(np.random.default_rng(seed).integers(0, 256))
+    x = jnp.full(shape, c, jnp.uint8)
+    np.testing.assert_array_equal(np.asarray(erode(x, (w, w))), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(dilate(x, (w, w))), np.asarray(x))
