@@ -16,6 +16,7 @@ import numpy as np
 from benchmarks.common import emit, paper_image, time_fn
 from repro.core import dilate, erode, gradient, morph2d_naive
 from repro.data import ImagePipelineConfig, cleanup_batch, synth_documents
+from repro.kernels import erode2d_tpu
 
 
 def run() -> None:
@@ -36,6 +37,13 @@ def run() -> None:
 
     t_g = time_fn(jax.jit(functools.partial(gradient, se=(5, 5))), x)
     emit("gradient_5x5", t_g * 1e6)
+
+    # kernel-level: fused megakernel (1 pallas_call) vs two-pass (4 calls)
+    for w in (3, 15):
+        t_f = time_fn(functools.partial(erode2d_tpu, se=(w, w), fused=True), x)
+        t_2 = time_fn(functools.partial(erode2d_tpu, se=(w, w), fused=False), x)
+        emit(f"erode2d_kernel_fused_w{w}", t_f * 1e6,
+             f"two-pass/fused={t_2 / t_f:.2f}x")
 
     imgs = synth_documents(ImagePipelineConfig(), 4)
     t_clean = time_fn(lambda: cleanup_batch(imgs))

@@ -1,0 +1,99 @@
+"""Fused megakernel vs two-pass kernels vs pure-JAX hybrid (§Perf A/B).
+
+Sweeps SE sizes {3, 15, 63} over shapes {512^2, 2048^2, (8, 1024^2)} and
+writes ``benchmarks/results/BENCH_fused.json`` (rendered into markdown by
+``benchmarks.report``). The fused column is the single-``pallas_call``
+megakernel (1 HBM read + 1 write); two-pass is the legacy
+morph + transpose + morph + transpose pipeline (4 traversals); jnp-hybrid is
+the pure-XLA separable path from core/morphology.py.
+
+    PYTHONPATH=src python -m benchmarks.bench_fused [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import erode
+from repro.kernels import erode2d_tpu
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "BENCH_fused.json")
+
+FULL_SHAPES = [(512, 512), (2048, 2048), (8, 1024, 1024)]
+FULL_WINDOWS = [3, 15, 63]
+QUICK_SHAPES = [(128, 128), (2, 64, 128)]
+QUICK_WINDOWS = [3, 15]
+
+
+def _image(shape) -> jnp.ndarray:
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+
+
+def _two_pass(x, se):
+    # for (B, H, W) the legacy path runs as vmap-of-kernels (the old story)
+    return erode2d_tpu(x, se, fused=False)
+
+
+def run(quick: bool = False) -> list[dict]:
+    shapes = QUICK_SHAPES if quick else FULL_SHAPES
+    windows = QUICK_WINDOWS if quick else FULL_WINDOWS
+    warmup, iters = (1, 2) if quick else (1, 3)
+    rows = []
+    for shape in shapes:
+        x = _image(shape)
+        for w in windows:
+            se = (w, w)
+            t_fused = time_fn(
+                functools.partial(erode2d_tpu, se=se, fused=True), x,
+                warmup=warmup, iters=iters,
+            )
+            t_two = time_fn(
+                functools.partial(_two_pass, se=se), x, warmup=warmup, iters=iters
+            )
+            t_jnp = time_fn(
+                jax.jit(functools.partial(erode, se=se)), x,
+                warmup=warmup, iters=iters,
+            )
+            row = {
+                "shape": list(shape),
+                "se": w,
+                "fused_s": t_fused,
+                "two_pass_s": t_two,
+                "jnp_hybrid_s": t_jnp,
+                "fused_vs_two_pass": t_two / t_fused,
+            }
+            rows.append(row)
+            emit(
+                f"erode2d_{'x'.join(map(str, shape))}_w{w}_fused", t_fused * 1e6,
+                f"two-pass/fused={row['fused_vs_two_pass']:.2f}x "
+                f"jnp/fused={t_jnp / t_fused:.2f}x",
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / few iters (CI smoke)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        # quick runs get their own file so they never clobber the full record
+        args.out = RESULTS.replace(".json", "_quick.json") if args.quick else RESULTS
+    rows = run(quick=args.quick)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

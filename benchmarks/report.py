@@ -42,6 +42,23 @@ def dryrun_table(path: str, title: str) -> str:
     return "\n".join(out)
 
 
+def fused_table(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["### Fused megakernel vs two-pass vs jnp-hybrid (erode2d)", "",
+           "| shape | SE | fused ms | two-pass ms | jnp-hybrid ms | "
+           "fused speedup vs two-pass |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        shape = "x".join(str(s) for s in r["shape"])
+        out.append(
+            f"| {shape} | {r['se']}x{r['se']} "
+            f"| {r['fused_s']*1e3:.2f} | {r['two_pass_s']*1e3:.2f} "
+            f"| {r['jnp_hybrid_s']*1e3:.2f} "
+            f"| **{r['fused_vs_two_pass']:.2f}x** |")
+    return "\n".join(out)
+
+
 def roofline_table(path: str) -> str:
     with open(path) as f:
         rows = json.load(f)
@@ -76,6 +93,10 @@ def main():
                                   "Dry-run — multi-pod (2x16x16 = 512 chips)"))
     except FileNotFoundError:
         parts.append("multi-pod dry-run results missing")
+    try:
+        parts.append(fused_table(f"{base}/BENCH_fused.json"))
+    except FileNotFoundError:
+        parts.append("fused-kernel results missing (run benchmarks.bench_fused)")
     try:
         parts.append(roofline_table(f"{base}/roofline.json"))
     except FileNotFoundError:

@@ -35,11 +35,25 @@ class DispatchPolicy:
     ``w0_minor``: threshold for passes along the minormost (lane) axis.
     ``w0_major``: threshold for passes along any other (sublane/batch) axis.
     Both mirror the paper's (w_x0, w_y0) pair.
+
+    ``fused_2d``: whether the kernel-backed 2-D operators run as the fused
+    single-``pallas_call`` megakernel (kernels/morph_fused.py — one HBM read
+    + one write per operator) or as the legacy two-pass + double-transpose
+    pipeline (four HBM traversals; kept for A/B and for SEs too wide for the
+    fused halo). Like the method thresholds this is a trace-time decision.
     """
 
     w0_minor: int = 15
     w0_major: int = 31
     small_method: Method = "linear_tree"  # beyond-paper default; paper used "linear"
+    fused_2d: bool = True
+    # Crossover for passes inside the fused megakernel. Much higher than
+    # w0_major: the fused linear ladder is slice-reductions over a
+    # VMEM-resident strip that the compiler fuses into one loop nest, while
+    # the vHGW doubling scans materialize a full strip per step — measured
+    # crossover ~255 on the CPU-interpret harness (DESIGN.md §5); expected
+    # to drop when recalibrated on real TPU Mosaic lowering.
+    w0_fused: int = 255
 
     @classmethod
     def paper(cls) -> "DispatchPolicy":
@@ -56,6 +70,8 @@ class DispatchPolicy:
                 w0_minor=int(d.get("w0_minor", cls.w0_minor)),
                 w0_major=int(d.get("w0_major", cls.w0_major)),
                 small_method=d.get("small_method", "linear_tree"),
+                fused_2d=bool(d.get("fused_2d", True)),
+                w0_fused=int(d.get("w0_fused", cls.w0_fused)),
             )
         return cls()
 

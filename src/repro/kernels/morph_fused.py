@@ -1,0 +1,319 @@
+"""Fused separable 2-D morphology megakernel: one ``pallas_call`` per op.
+
+The paper's core win (§4, §5.2) is that the vertical pass never sees data in
+a slow layout: the transpose happens *inside the working set* via the VTRN
+in-register ladder, so a full erode/dilate costs one read and one write of
+the image. The previous TPU port lost exactly that — ``erode2d_tpu`` issued
+two morphology ``pallas_call``s plus two full ``transpose_tiled`` kernels,
+i.e. four HBM traversals. This kernel restores the paper's structure:
+
+* grid ``(B, W/BW)`` — a leading batch dimension so ``(B, H, W)`` stacks run
+  as one launch instead of ``vmap``-of-kernels;
+* per grid cell, a haloed ``(H + w_h - 1, BW + w_w - 1)`` strip is assembled
+  in VMEM from the center block plus a narrow pre-gathered halo block
+  (``2 * wing_w`` columns per grid cell, built by one cheap XLA gather over
+  ~``2*wing_w/BW`` of the image), so each cell reads ``BW + w_w - 1``
+  columns — not three full blocks, and not a second HBM traversal;
+* the sublane (H) pass runs first — linear ladder for small windows, vHGW
+  Hillis-Steele scans for large, per ``DispatchPolicy`` thresholds;
+* the block is transposed *inside the kernel* (``.T`` on the VMEM value —
+  Mosaic's lane/sublane exchange, the TPU analog of the paper's VTRN ladder,
+  i.e. ``transpose_tiled``'s in-tile trick without the HBM round trip);
+* the lane-turned-sublane (W) pass runs, the block is transposed back, and
+  the single output store happens.
+
+HBM traffic per operator: ~(1 + w_w/BW) reads + 1 write versus 4 full
+read+write round trips for the two-pass + double-transpose path.
+
+VMEM budget per grid cell (see DESIGN.md §5): the (Hp, BW) center block,
+the (Hp, 2*wing_w) halo block, the assembled (Hp, BW + w_w - 1) strip, and
+the transposed (BW + w_w - 1, H) scratch; ``_pick_block_w`` sizes BW
+against a 12 MB soft budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dispatch import DispatchPolicy
+from repro.core.types import MAX, MIN, Array, as_op, check_window
+from repro.kernels.morph_vhgw import _scan_segments
+
+
+def _resolve_methods(se, method, policy: DispatchPolicy | None):
+    """Per-axis linear-vs-vHGW choice. Both fused passes are sublane passes
+    (the W pass runs after the in-kernel transpose), and both work on a
+    VMEM-resident strip, so the dedicated ``w0_fused`` threshold applies —
+    not the HBM-pass thresholds w0_minor/w0_major (see DESIGN.md §5)."""
+    policy = policy or DispatchPolicy.calibrated()
+    if method == "auto":
+        return tuple("linear" if w <= policy.w0_fused else "vhgw" for w in se)
+    if method in ("linear", "vhgw"):
+        return (method, method)
+    raise ValueError(f"fused kernel supports 'auto'|'linear'|'vhgw', got {method!r}")
+
+
+def _vmem_pass(block, w: int, op, neutral, method: str, n_out: int):
+    """Running min/max of window ``w`` along axis 0 of an in-VMEM value.
+
+    ``block`` has ``n_out + w - 1`` rows (the haloed extent); returns
+    ``n_out`` rows. Slices along sublanes are free offset reads of the same
+    VMEM value, exactly like the two standalone kernels.
+    """
+    if w == 1:
+        return block
+    if method == "linear":
+        val = block[0:n_out, :]
+        for k in range(1, w):
+            val = op.reduce(val, block[k : k + n_out, :])
+        return val
+    # vHGW: pad rows to a whole number of w-segments, then the forward /
+    # backward Hillis-Steele scans of morph_vhgw, all inside VMEM.
+    rows, cols = block.shape
+    nseg = -(-rows // w)
+    extra = nseg * w - rows
+    if extra:
+        block = jnp.concatenate(
+            [block, jnp.full((extra, cols), neutral, block.dtype)], axis=0
+        )
+    segs = block.reshape(nseg, w, cols)
+    fwd = _scan_segments(segs, op, neutral, reverse=False).reshape(nseg * w, cols)
+    bwd = _scan_segments(segs, op, neutral, reverse=True).reshape(nseg * w, cols)
+    return op.reduce(bwd[0:n_out, :], fwd[w - 1 : w - 1 + n_out, :])
+
+
+def _assemble_strip(xc, xh, wing_w: int):
+    """Haloed strip (Hp, BW + 2*wing_w) from the center block and the
+    narrow pre-gathered halo block (Hp, 2*wing_w): left wing first."""
+    if wing_w == 0:
+        return xc
+    return jnp.concatenate([xh[:, :wing_w], xc, xh[:, wing_w:]], axis=1)
+
+
+def _fused_pipeline(strip, *, w_h, w_w, op, neutral, method_h, method_w, h_out):
+    """H pass -> in-VMEM transpose -> W pass -> transpose back."""
+    y = _vmem_pass(strip, w_h, op, neutral, method_h, h_out)
+    yt = y.T  # in-VMEM transpose: Mosaic's lane/sublane exchange (paper §4)
+    bw = yt.shape[0] - (w_w - 1)
+    z = _vmem_pass(yt, w_w, op, neutral, method_w, bw)
+    return z.T
+
+
+def _fused_kernel(xc_ref, xh_ref, o_ref, *, w_h, w_w, opname,
+                  method_h, method_w, wing_w):
+    op = as_op(opname)
+    neutral = op.neutral(xc_ref.dtype)
+    strip = _assemble_strip(xc_ref[0], xh_ref[0], wing_w)
+    o_ref[0] = _fused_pipeline(
+        strip, w_h=w_h, w_w=w_w, op=op, neutral=neutral,
+        method_h=method_h, method_w=method_w, h_out=o_ref.shape[1],
+    )
+
+
+def _gradient_kernel(nc_ref, nh_ref, xc_ref, xh_ref, o_ref, *,
+                     w_h, w_w, method_h, method_w, wing_w):
+    """Shared-load fused gradient: the min (erode) and max (dilate) pipelines
+    run over the same haloed strip in one kernel; only the pad borders differ
+    (each op needs its own neutral element), hence two padded views."""
+    h_out = o_ref.shape[1]
+    e = _fused_pipeline(
+        _assemble_strip(nc_ref[0], nh_ref[0], wing_w),
+        w_h=w_h, w_w=w_w, op=MIN, neutral=MIN.neutral(nc_ref.dtype),
+        method_h=method_h, method_w=method_w, h_out=h_out,
+    )
+    d = _fused_pipeline(
+        _assemble_strip(xc_ref[0], xh_ref[0], wing_w),
+        w_h=w_h, w_w=w_w, op=MAX, neutral=MAX.neutral(xc_ref.dtype),
+        method_h=method_h, method_w=method_w, h_out=h_out,
+    )
+    o_ref[0] = d.astype(o_ref.dtype) - e.astype(o_ref.dtype)
+
+
+def _pad_for_grid(x, wing_h: int, wing_w: int, block_w: int, neutral):
+    """Neutral-pad (B, H, W) to (B, Hp, gw * BW) plus a narrow pre-gathered
+    halo array (B, Hp, gw * 2 * wing_w) holding, for each column block, its
+    left wing then its right wing. The halo gather is one cheap XLA pass over
+    ~2*wing_w/BW of the image, and it is what lets every grid cell read
+    BW + 2*wing_w columns instead of three full blocks. Returns
+    (padded, halo, gw)."""
+    b, _, wid = x.shape
+    pw = -wid % block_w
+    gw = (wid + pw) // block_w
+    xp = jnp.pad(
+        x,
+        ((0, 0), (wing_h, wing_h), (wing_w, pw + wing_w)),
+        constant_values=neutral,
+    )
+    hp = xp.shape[1]
+    if wing_w == 0:
+        # degenerate 1-col dummy so the BlockSpec stays well-formed
+        return xp, jnp.zeros((b, hp, gw), xp.dtype), gw
+    left = jnp.stack(
+        [xp[:, :, j * block_w : j * block_w + wing_w] for j in range(gw)], axis=2
+    )
+    right = jnp.stack(
+        [
+            xp[:, :, wing_w + (j + 1) * block_w : wing_w + (j + 1) * block_w + wing_w]
+            for j in range(gw)
+        ],
+        axis=2,
+    )
+    halo = jnp.concatenate([left, right], axis=-1).reshape(b, hp, gw * 2 * wing_w)
+    core = xp[:, :, wing_w : wing_w + gw * block_w]
+    return core, halo, gw
+
+
+_VMEM_SOFT_BUDGET = 12 * 2**20  # leave headroom under the ~16 MB/core VMEM
+_MAX_AUTO_BLOCK_W = 512  # widest strip _pick_block_w will choose
+
+
+def fused_supports(se) -> bool:
+    """Whether the fused kernel's auto block sizing covers this SE's W-halo
+    (the single capability predicate ops.py dispatches on)."""
+    return (check_window(se[1]) - 1) // 2 <= _MAX_AUTO_BLOCK_W
+
+
+def _pick_block_w(wing_w: int, h: int, w_h: int, itemsize: int) -> int:
+    """Auto block width: widen the strip until the W-halo overhead
+    ((BW + w_w - 1) / BW) is small, then shrink back while the estimated
+    VMEM working set exceeds the soft budget (DESIGN.md §5)."""
+    min_bw = 128
+    while min_bw < wing_w:  # correctness floor: the halo must fit one block
+        min_bw *= 2
+    bw = min_bw
+    while bw < _MAX_AUTO_BLOCK_W and wing_w > bw // 16:
+        bw *= 2
+    while bw > min_bw:
+        hp = h + w_h - 1
+        strip_w = bw + 2 * wing_w
+        est = (hp * (bw + 2 * wing_w + strip_w) + 2 * strip_w * h) * itemsize
+        if est <= _VMEM_SOFT_BUDGET:
+            break
+        bw //= 2
+    return bw
+
+
+def _check_fusable(se, block_w: int | None) -> tuple[int, int]:
+    w_h, w_w = (check_window(w) for w in se)
+    if block_w is not None and (w_w - 1) // 2 > block_w:
+        raise ValueError(
+            f"fused kernel needs wing_w <= block_w ({(w_w - 1) // 2} > {block_w}); "
+            "use the two-pass path (fused=False) for such wide SEs"
+        )
+    return w_h, w_w
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("se", "op", "method", "policy", "block_w", "interpret"),
+)
+def morph2d_fused(
+    x: Array,
+    se=(3, 3),
+    *,
+    op: str = "min",
+    method: str = "auto",
+    policy: DispatchPolicy | None = None,
+    block_w: int | None = None,
+    interpret: bool = True,
+) -> Array:
+    """Separable 2-D erosion/dilation as a single ``pallas_call``.
+
+    ``x`` is ``(H, W)`` or ``(B, H, W)``; batches run as a leading grid
+    dimension, not ``vmap``-of-kernels.
+    """
+    w_h, w_w = _check_fusable(se, block_w)
+    mop = as_op(op)
+    if x.ndim == 2:
+        return morph2d_fused(
+            x[None], se, op=mop.name, method=method, policy=policy,
+            block_w=block_w, interpret=interpret,
+        )[0]
+    if x.ndim != 3:
+        raise ValueError("morph2d_fused operates on (H, W) or (B, H, W)")
+    if w_h == 1 and w_w == 1:
+        return x
+    b, h, wid = x.shape
+    wing_h, wing_w = (w_h - 1) // 2, (w_w - 1) // 2
+    if block_w is None:
+        block_w = _pick_block_w(wing_w, h, w_h, jnp.dtype(x.dtype).itemsize)
+    method_h, method_w = _resolve_methods((w_h, w_w), method, policy)
+    core, halo, gw = _pad_for_grid(x, wing_h, wing_w, block_w, mop.neutral(x.dtype))
+    hp = h + 2 * wing_h
+    halo_cols = halo.shape[-1] // gw
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, w_h=w_h, w_w=w_w, opname=mop.name,
+            method_h=method_h, method_w=method_w, wing_w=wing_w,
+        ),
+        grid=(b, gw),
+        in_specs=[
+            pl.BlockSpec((1, hp, block_w), lambda bi, j: (bi, 0, j)),
+            pl.BlockSpec((1, hp, halo_cols), lambda bi, j: (bi, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, h, block_w), lambda bi, j: (bi, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h, gw * block_w), x.dtype),
+        interpret=interpret,
+    )(core, halo)
+    return out[:, :, :wid]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("se", "method", "policy", "block_w", "interpret"),
+)
+def gradient2d_fused(
+    x: Array,
+    se=(3, 3),
+    *,
+    method: str = "auto",
+    policy: DispatchPolicy | None = None,
+    block_w: int | None = None,
+    interpret: bool = True,
+) -> Array:
+    """Fused 2-D morphological gradient (dilate - erode) in one launch.
+
+    Both pipelines run over the strip inside one kernel, but two padded
+    views of the image are shipped (erode and dilate need different neutral
+    border values), so the cost is 2 reads + 1 write — versus ~9 traversals
+    for two-pass dilate/erode plus the subtraction. Integer inputs widen to
+    int32 (i8 differences overflow i8), floats keep their dtype.
+    """
+    w_h, w_w = _check_fusable(se, block_w)
+    if x.ndim == 2:
+        return gradient2d_fused(
+            x[None], se, method=method, policy=policy,
+            block_w=block_w, interpret=interpret,
+        )[0]
+    if x.ndim != 3:
+        raise ValueError("gradient2d_fused operates on (H, W) or (B, H, W)")
+    out_dtype = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else x.dtype
+    if w_h == 1 and w_w == 1:
+        return jnp.zeros_like(x, dtype=out_dtype)
+    b, h, wid = x.shape
+    wing_h, wing_w = (w_h - 1) // 2, (w_w - 1) // 2
+    if block_w is None:
+        # gradient holds two strips (min and max pipelines): halve the budget
+        block_w = _pick_block_w(wing_w, h, w_h, 2 * jnp.dtype(x.dtype).itemsize)
+    method_h, method_w = _resolve_methods((w_h, w_w), method, policy)
+    core_min, halo_min, gw = _pad_for_grid(x, wing_h, wing_w, block_w, MIN.neutral(x.dtype))
+    core_max, halo_max, _ = _pad_for_grid(x, wing_h, wing_w, block_w, MAX.neutral(x.dtype))
+    hp = h + 2 * wing_h
+    halo_cols = halo_min.shape[-1] // gw
+    core_spec = pl.BlockSpec((1, hp, block_w), lambda bi, j: (bi, 0, j))
+    halo_spec = pl.BlockSpec((1, hp, halo_cols), lambda bi, j: (bi, 0, j))
+    out = pl.pallas_call(
+        functools.partial(
+            _gradient_kernel, w_h=w_h, w_w=w_w,
+            method_h=method_h, method_w=method_w, wing_w=wing_w,
+        ),
+        grid=(b, gw),
+        in_specs=[core_spec, halo_spec, core_spec, halo_spec],
+        out_specs=pl.BlockSpec((1, h, block_w), lambda bi, j: (bi, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h, gw * block_w), out_dtype),
+        interpret=interpret,
+    )(core_min, halo_min, core_max, halo_max)
+    return out[:, :, :wid]

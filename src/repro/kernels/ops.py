@@ -8,7 +8,16 @@
   runs as transpose-kernel -> sublane pass -> transpose-kernel, the paper's
   §5.2 transpose trick (or an XLA transpose, selectable, for §Perf A/B).
 
-``erode2d_tpu`` / ``dilate2d_tpu`` compose the two separable passes.
+The 2-D operators (``erode2d_tpu`` / ``dilate2d_tpu`` / ``opening2d_tpu`` /
+``closing2d_tpu`` / ``gradient2d_tpu``) default to the *fused* megakernel
+(kernels/morph_fused.py): one ``pallas_call`` doing H pass -> in-VMEM
+transpose -> W pass -> store, one HBM read + write per operator, with a
+batch grid for (B, H, W) stacks. ``fused=False`` (or
+``DispatchPolicy(fused_2d=False)``) selects the legacy two-pass +
+double-transpose pipeline for A/B comparison; SEs whose W-wing exceeds the
+fused policy range (``morph_fused.fused_supports``) fall back to it
+automatically.
+
 All entry points accept ``interpret=`` so CPU CI validates the same code
 that targets TPU.
 """
@@ -17,11 +26,13 @@ from __future__ import annotations
 import functools
 from typing import Literal
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import DispatchPolicy
 from repro.core.types import Array, as_op, check_window
 from repro.kernels.fused_gradient import gradient_linear_sublane
+from repro.kernels.morph_fused import fused_supports, gradient2d_fused, morph2d_fused
 from repro.kernels.morph_linear import morph_linear_sublane
 from repro.kernels.morph_vhgw import morph_vhgw_sublane
 from repro.kernels.transpose import transpose_tiled
@@ -68,24 +79,102 @@ def morph_1d_tpu(
     return jnp.swapaxes(out, 0, 1)
 
 
-def erode2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+def _use_fused(se, fused: bool | None, policy: DispatchPolicy) -> bool:
+    if fused is None:
+        fused = policy.fused_2d
+    return fused and fused_supports(se)
+
+
+def _morph2d_two_pass(x, se, op, method, lane_strategy, policy, interpret):
+    if x.ndim == 3:  # the fused path's batch grid has no two-pass analog
+        return jax.vmap(
+            lambda m: _morph2d_two_pass(
+                m, se, op, method, lane_strategy, policy, interpret
+            )
+        )(x)
     w_h, w_w = se
-    y = morph_1d_tpu(x, w_h, axis=0, op="min", **kw)
-    return morph_1d_tpu(y, w_w, axis=1, op="min", **kw)
+    y = morph_1d_tpu(
+        x, w_h, axis=0, op=op, method=method,
+        lane_strategy=lane_strategy, policy=policy, interpret=interpret,
+    )
+    return morph_1d_tpu(
+        y, w_w, axis=1, op=op, method=method,
+        lane_strategy=lane_strategy, policy=policy, interpret=interpret,
+    )
+
+
+def _morph2d(
+    x: Array,
+    se,
+    op: str,
+    *,
+    fused: bool | None = None,
+    method: str = "auto",
+    lane_strategy: LaneStrategy = "transpose_kernel",
+    policy: DispatchPolicy | None = None,
+    interpret: bool = True,
+) -> Array:
+    policy = policy or DispatchPolicy.calibrated()
+    if _use_fused(se, fused, policy) and x.ndim in (2, 3):
+        return morph2d_fused(
+            x, tuple(se), op=op, method=method if method in ("auto", "linear", "vhgw") else "auto",
+            policy=policy, interpret=interpret,
+        )
+    return _morph2d_two_pass(x, se, op, method, lane_strategy, policy, interpret)
+
+
+def erode2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    """2-D erosion; one fused ``pallas_call`` by default (``fused=False`` A/B)."""
+    return _morph2d(x, se, "min", **kw)
 
 
 def dilate2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
-    w_h, w_w = se
-    y = morph_1d_tpu(x, w_h, axis=0, op="max", **kw)
-    return morph_1d_tpu(y, w_w, axis=1, op="max", **kw)
+    """2-D dilation; one fused ``pallas_call`` by default (``fused=False`` A/B)."""
+    return _morph2d(x, se, "max", **kw)
 
 
 def opening2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    """Erode then dilate: two fused launches by default (was eight)."""
     return dilate2d_tpu(erode2d_tpu(x, se, **kw), se, **kw)
 
 
 def closing2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+    """Dilate then erode: two fused launches by default (was eight)."""
     return erode2d_tpu(dilate2d_tpu(x, se, **kw), se, **kw)
+
+
+def gradient2d_tpu(
+    x: Array,
+    se=(3, 3),
+    *,
+    fused: bool | None = None,
+    method: str = "auto",
+    lane_strategy: LaneStrategy = "transpose_kernel",
+    policy: DispatchPolicy | None = None,
+    interpret: bool = True,
+) -> Array:
+    """2-D morphological gradient (dilate - erode, widened for integers).
+
+    The default fused path shares the haloed strip load between the min and
+    max pipelines in a single ``pallas_call``; ``fused=False`` computes the
+    two-pass dilate/erode pair and subtracts.
+    """
+    policy = policy or DispatchPolicy.calibrated()
+    if _use_fused(se, fused, policy) and x.ndim in (2, 3):
+        return gradient2d_fused(
+            x, tuple(se),
+            method=method if method in ("auto", "linear", "vhgw") else "auto",
+            policy=policy, interpret=interpret,
+        )
+    kw = dict(
+        fused=False, method=method, lane_strategy=lane_strategy,
+        policy=policy, interpret=interpret,
+    )
+    d = dilate2d_tpu(x, se, **kw)
+    e = erode2d_tpu(x, se, **kw)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return d.astype(jnp.int32) - e.astype(jnp.int32)
+    return d - e
 
 
 def gradient_1d_tpu(x: Array, w: int, *, axis: int = -2, interpret: bool = True) -> Array:

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.linear_pass import linear_1d
+from repro.core.morphology import morph2d_naive
 from repro.core.types import Array
 
 
@@ -26,6 +27,21 @@ def gradient_1d_ref(x: Array, w: int, *, axis: int) -> Array:
     """Oracle for kernels/fused_gradient.py (1-D): dilate - erode, widened."""
     d = linear_1d(x, w, axis=axis, op="max")
     e = linear_1d(x, w, axis=axis, op="min")
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return d.astype(jnp.int32) - e.astype(jnp.int32)
+    return d - e
+
+
+def morph2d_ref(x: Array, se, *, op: str) -> Array:
+    """Oracle for kernels/morph_fused.py: the naive non-separable 2-D
+    reduction (batch dims broadcast)."""
+    return morph2d_naive(x, se, op=op)
+
+
+def gradient2d_ref(x: Array, se) -> Array:
+    """Oracle for the fused 2-D gradient: dilate2d - erode2d, widened."""
+    d = morph2d_naive(x, se, op="max")
+    e = morph2d_naive(x, se, op="min")
     if jnp.issubdtype(x.dtype, jnp.integer):
         return d.astype(jnp.int32) - e.astype(jnp.int32)
     return d - e

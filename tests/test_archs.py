@@ -16,6 +16,8 @@ from repro.models.model import (
 )
 from repro.optim import adamw_init, adamw_update
 
+pytestmark = pytest.mark.slow  # heavyweight: deselected from tier-1 (see pytest.ini)
+
 B, S = 2, 16
 
 

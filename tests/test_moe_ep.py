@@ -1,10 +1,14 @@
 """Expert-parallel MoE (§Perf iteration D): shard_map path vs GSPMD path."""
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ffn, get_config
 from repro.models.model import init_decode_cache, init_params, serve_step
+
+pytestmark = pytest.mark.slow  # heavyweight: deselected from tier-1 (see pytest.ini)
 
 
 def test_ep_decode_matches_baseline():

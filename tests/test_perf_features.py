@@ -19,6 +19,8 @@ from repro.models.model import (
     serve_step,
 )
 
+pytestmark = pytest.mark.slow  # heavyweight: deselected from tier-1 (see pytest.ini)
+
 
 def test_banded_equals_masked_full_attention():
     cfg = dataclasses.replace(get_config("gemma2-2b").reduced(), local_window=8)

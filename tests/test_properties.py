@@ -7,6 +7,9 @@ method-equivalence (vHGW == linear == tree for arbitrary inputs/windows).
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # minimal envs lack it; skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

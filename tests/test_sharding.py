@@ -17,6 +17,8 @@ from repro.models.attention import causal_mask
 from repro.models.model import init_decode_cache, init_params
 from repro.optim import adamw_init
 
+pytestmark = pytest.mark.slow  # heavyweight: deselected from tier-1 (see pytest.ini)
+
 
 class FakeMesh:
     """Structural stand-in: sharding rules only need .shape and .axis_names."""

@@ -32,6 +32,8 @@ from repro.optim import (
 from repro.serve import generate
 from repro.train import Trainer, TrainLoopConfig
 
+pytestmark = pytest.mark.slow  # heavyweight: deselected from tier-1 (see pytest.ini)
+
 CFG = get_config("qwen1.5-0.5b").reduced()
 
 
