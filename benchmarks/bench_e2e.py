@@ -3,7 +3,9 @@
 * separable vs naive 2-D (the complexity win separability buys),
 * erosion == dilation cost symmetry (paper: "identical, we show erosion"),
 * fused-gradient vs two-pass gradient (beyond-paper kernel, jnp-level),
-* the document-cleanup pipeline (data/images.py) throughput.
+* the document-cleanup pipeline (data/images.py) throughput,
+* the serving engine (serve/morph) vs sequential dispatch on diverse-shape
+  traffic (the full sweep lives in benchmarks.bench_serve).
 """
 from __future__ import annotations
 
@@ -49,6 +51,31 @@ def run() -> None:
     t_clean = time_fn(lambda: cleanup_batch(imgs))
     emit("document_cleanup_batch4_800x600", t_clean * 1e6,
          f"{4 / t_clean:.1f} img/s")
+
+    # serving engine: micro-batched service vs sequential single-image
+    # dispatch over diverse request shapes (one quick point; the sweep is
+    # benchmarks.bench_serve -> BENCH_serve.json)
+    import time as _time
+
+    from repro.serve.morph import MorphService, ServiceConfig
+
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(0, 256, (120 - int(rng.integers(0, 16)),
+                                  160 - int(rng.integers(0, 16))),
+                         dtype=np.uint8) for _ in range(16)]
+    t0 = _time.perf_counter()
+    for r in reqs:
+        c, e = cleanup_batch(r[None])
+        np.asarray(c)
+    t_seq = _time.perf_counter() - t0
+    with MorphService(ServiceConfig(buckets=((128, 256),), max_batch=16,
+                                    window_ms=2.0)) as svc:
+        svc.run_batch(reqs, "document_cleanup")  # warm
+        t0 = _time.perf_counter()
+        svc.run_batch(reqs, "document_cleanup")
+        t_srv = _time.perf_counter() - t0
+    emit("serve_cleanup_16_diverse_shapes", t_srv * 1e6,
+         f"sequential/serve={t_seq / t_srv:.1f}x (compile-per-shape removed)")
 
 
 if __name__ == "__main__":

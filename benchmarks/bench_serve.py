@@ -1,0 +1,179 @@
+"""Serving benchmark: micro-batched MorphService vs sequential dispatch.
+
+Traffic model: every request is a novel (h, w) — scanned documents never
+share shapes. Each concurrency level runs the ``document_cleanup`` chain
+three ways over the same request stream:
+
+* **direct** — the pre-serving status quo: one ``cleanup_batch(img[None])``
+  call per request, sequentially. Every novel shape pays an XLA compile —
+  exactly the failure mode the bucket ladder exists to remove.
+* **direct_warm** — the same stream replayed after all its shapes have
+  compiled: an artificial steady state (real diverse traffic never reaches
+  it) isolating pure compute, so the bucket-padding tax is visible.
+* **serve** — all requests submitted concurrently to MorphService, which
+  pads them into one bucket and coalesces them into stacks behind a single
+  warm executable (cache misses stay at 1 regardless of shape diversity).
+
+Emits ``benchmarks/results/BENCH_serve.json``. The acceptance bar
+(ISSUE 2): serve img/s >= 3x direct at 64 concurrent requests with a warm
+executable cache; ``speedup`` is that ratio, ``speedup_warm`` the
+compute-parity secondary.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.data.images import cleanup_batch
+from repro.serve.morph import MorphService, ServiceConfig
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "BENCH_serve.json")
+
+
+def synth_requests(
+    n: int, h: int, w: int, jitter: int, seed: int
+) -> list[np.ndarray]:
+    """n u8 images with distinct-ish (h, w) — diverse serving traffic."""
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(
+            0,
+            256,
+            (h - int(rng.integers(0, jitter)), w - int(rng.integers(0, jitter))),
+            dtype=np.uint8,
+        )
+        for _ in range(n)
+    ]
+
+
+def _direct_pass(imgs: list[np.ndarray]) -> list[float]:
+    per_call = []
+    for img in imgs:
+        t = time.perf_counter()
+        clean, edges = cleanup_batch(img[None])
+        np.asarray(clean), np.asarray(edges)
+        per_call.append(time.perf_counter() - t)
+    return per_call
+
+
+def bench_direct(streams: list[list[np.ndarray]]) -> tuple[float, float, float, float]:
+    """Sequential single-image dispatch over fresh-shape streams.
+
+    Returns (img/s, p99 ms) for the diverse stream and for a warm replay of
+    the same shapes."""
+    per_call = []
+    t0 = time.perf_counter()
+    for imgs in streams:
+        per_call.extend(_direct_pass(imgs))
+    wall = time.perf_counter() - t0
+    n = sum(len(s) for s in streams)
+    # replay: every shape above is now jit-warm
+    per_warm = []
+    t0 = time.perf_counter()
+    for imgs in streams:
+        per_warm.extend(_direct_pass(imgs))
+    wall_warm = time.perf_counter() - t0
+    return (
+        n / wall,
+        float(np.percentile(per_call, 99) * 1e3),
+        n / wall_warm,
+        float(np.percentile(per_warm, 99) * 1e3),
+    )
+
+
+def bench_serve(
+    streams: list[list[np.ndarray]], bucket: tuple[int, int], max_batch: int
+) -> tuple[float, float, dict]:
+    cfg = ServiceConfig(buckets=(bucket,), max_batch=max_batch, window_ms=2.0)
+    n = sum(len(s) for s in streams)
+    with MorphService(cfg) as svc:
+        # warm the executable cache (one compile per batch-size bucket)
+        svc.run_batch(streams[0], "document_cleanup")
+        latencies: list[float] = []
+        stamps: dict[int, float] = {}
+
+        def done(f):
+            latencies.append(time.perf_counter() - stamps[id(f)])
+
+        t0 = time.perf_counter()
+        for imgs in streams:
+            futs = []
+            for img in imgs:
+                t_sub = time.perf_counter()
+                f = svc.submit_plan(img, "document_cleanup")
+                stamps[id(f)] = t_sub
+                f.add_done_callback(done)  # fires inline if already resolved
+                futs.append(f)
+            for f in futs:
+                f.result()
+        wall = time.perf_counter() - t0
+        stats = svc.stats()
+    p99 = float(np.percentile(latencies, 99) * 1e3) if latencies else 0.0
+    return n / wall, p99, stats
+
+
+def run(quick: bool = False) -> list[dict]:
+    h, w = (64, 96) if quick else (160, 224)
+    bucket = (64, 128) if quick else (192, 256)
+    levels = (1, 8, 16) if quick else (1, 8, 64)
+    rounds = 2 if quick else 3
+    rows = []
+    for n in levels:
+        streams = [
+            synth_requests(n, h, w, jitter=16, seed=1000 * n + r)
+            for r in range(rounds)
+        ]
+        d_ips, d_p99, dw_ips, dw_p99 = bench_direct(streams)
+        s_ips, s_p99, stats = bench_serve(streams, bucket, max_batch=min(64, n))
+        row = {
+            "concurrency": n,
+            "shape": [h, w],
+            "bucket": list(bucket),
+            "rounds": rounds,
+            "direct_img_s": round(d_ips, 2),
+            "direct_warm_img_s": round(dw_ips, 2),
+            "serve_img_s": round(s_ips, 2),
+            "speedup": round(s_ips / d_ips, 2) if d_ips else None,
+            "speedup_warm": round(s_ips / dw_ips, 2) if dw_ips else None,
+            "direct_p99_ms": round(d_p99, 2),
+            "direct_warm_p99_ms": round(dw_p99, 2),
+            "serve_p99_ms": round(s_p99, 2),
+            "occupancy": round(stats["occupancy"], 3),
+            "mean_batch": round(stats["mean_batch"], 2),
+            "cache_hit_rate": round(stats["cache"]["hit_rate"], 3),
+            "cache_misses": stats["cache"]["misses"],
+        }
+        rows.append(row)
+        print(
+            f"concurrency={n:3d}  direct={d_ips:7.1f} img/s  "
+            f"serve={s_ips:7.1f} img/s  speedup={row['speedup']}x "
+            f"(warm {row['speedup_warm']}x)  serve_p99={s_p99:.1f} ms  "
+            f"occupancy={row['occupancy']}"
+        )
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {RESULTS}")
+    return rows
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small buckets + few rounds (CI smoke)")
+    rows = run(quick=p.parse_args().quick)
+    top = rows[-1]
+    if top["speedup"] is not None and top["speedup"] < 3.0:
+        print(f"WARNING: serve speedup {top['speedup']}x below the 3x bar "
+              f"at concurrency {top['concurrency']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,7 +2,7 @@
 
 Public API re-exports. See DESIGN.md for how each piece maps to the paper.
 """
-from repro.core.dispatch import DispatchPolicy, morph_1d
+from repro.core.dispatch import DispatchPolicy, morph_1d, resolve_interpret
 from repro.core.linear_pass import linear_1d, linear_1d_paired, linear_1d_tree
 from repro.core.masks import band_mask, dilate_mask, erode_mask, maxpool2d
 from repro.core.morphology import (
@@ -23,6 +23,7 @@ from repro.core.vhgw import vhgw_1d
 __all__ = [
     "DispatchPolicy",
     "morph_1d",
+    "resolve_interpret",
     "linear_1d",
     "linear_1d_paired",
     "linear_1d_tree",

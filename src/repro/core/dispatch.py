@@ -19,6 +19,8 @@ import json
 import os
 from typing import Literal
 
+import jax
+
 from repro.core.linear_pass import linear_1d, linear_1d_paired, linear_1d_tree
 from repro.core.types import Array, as_op, check_window
 from repro.core.vhgw import vhgw_1d
@@ -26,6 +28,30 @@ from repro.core.vhgw import vhgw_1d
 Method = Literal["auto", "linear", "linear_paired", "linear_tree", "vhgw"]
 
 _CALIBRATION_FILE = os.path.join(os.path.dirname(__file__), "calibration.json")
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def resolve_interpret(
+    interpret: bool | None, policy: "DispatchPolicy | None" = None
+) -> bool:
+    """Single resolver for the Pallas ``interpret`` flag.
+
+    Precedence: explicit argument > ``DispatchPolicy.interpret`` >
+    ``REPRO_PALLAS_INTERPRET`` env var > backend default (compiled Mosaic on
+    TPU, interpret elsewhere). Kernel entry points (kernels/ops.py) call this
+    once instead of hard-coding ``interpret=True``, so production serving on
+    TPU never silently runs interpreted Pallas; tests keep pinning
+    ``interpret=True`` explicitly.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    if policy is not None and policy.interpret is not None:
+        return policy.interpret
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off", "")
+    return jax.default_backend() != "tpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +73,10 @@ class DispatchPolicy:
     w0_major: int = 31
     small_method: Method = "linear_tree"  # beyond-paper default; paper used "linear"
     fused_2d: bool = True
+    # Pallas interpret-mode override: None defers to the env var / backend
+    # default (see resolve_interpret). Part of the policy so serving cache
+    # keys capture it.
+    interpret: bool | None = None
     # Crossover for passes inside the fused megakernel. Much higher than
     # w0_major: the fused linear ladder is slice-reductions over a
     # VMEM-resident strip that the compiler fuses into one loop nest, while
@@ -54,6 +84,17 @@ class DispatchPolicy:
     # crossover ~255 on the CPU-interpret harness (DESIGN.md §5); expected
     # to drop when recalibrated on real TPU Mosaic lowering.
     w0_fused: int = 255
+
+    def cache_token(self) -> tuple:
+        """Stable, hashable fingerprint of every dispatch-relevant field.
+
+        The serving layer keys its executable cache on this (alongside
+        bucket/dtype/op), so two policies that compile identically share an
+        executable and any differing field forces a fresh compile.
+        """
+        return tuple(
+            (f.name, getattr(self, f.name)) for f in dataclasses.fields(self)
+        )
 
     @classmethod
     def paper(cls) -> "DispatchPolicy":

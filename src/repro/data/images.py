@@ -57,11 +57,21 @@ def synth_documents(cfg: ImagePipelineConfig, batch: int) -> np.ndarray:
     return img
 
 
+# The canonical cleanup chain, as data: (op, se) stages consumed both by
+# ``_cleanup`` below and by serve/morph/plans.py (``document_cleanup`` plan),
+# so the service and the raw pipeline are verifiably the same computation.
+CLEANUP_STEPS: tuple[tuple[str, tuple[int, int]], ...] = (
+    ("opening", (3, 3)),   # removes salt noise
+    ("closing", (5, 5)),   # heals broken strokes -> "clean" output
+    ("gradient", (3, 3)),  # stroke edges (u8) -> "edges" output
+)
+
+
 @jax.jit
 def _cleanup(img: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    x = opening(img, (3, 3))
-    x = closing(x, (5, 5))
-    edges = gradient(x, (3, 3)).astype(jnp.uint8)
+    x = opening(img, CLEANUP_STEPS[0][1])
+    x = closing(x, CLEANUP_STEPS[1][1])
+    edges = gradient(x, CLEANUP_STEPS[2][1]).astype(jnp.uint8)
     return x, edges
 
 

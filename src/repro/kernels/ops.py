@@ -18,8 +18,12 @@ double-transpose pipeline for A/B comparison; SEs whose W-wing exceeds the
 fused policy range (``morph_fused.fused_supports``) fall back to it
 automatically.
 
-All entry points accept ``interpret=`` so CPU CI validates the same code
-that targets TPU.
+All entry points accept ``interpret=``; the default ``None`` defers to the
+single resolver (``core.dispatch.resolve_interpret``): explicit argument >
+``DispatchPolicy.interpret`` > ``REPRO_PALLAS_INTERPRET`` env var > backend
+default (compiled on TPU, interpret elsewhere) — so CPU CI validates the
+same code that targets TPU without production ever silently running
+interpreted Pallas.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import DispatchPolicy
+from repro.core.dispatch import DispatchPolicy, resolve_interpret
 from repro.core.types import Array, as_op, check_window
 from repro.kernels.fused_gradient import gradient_linear_sublane
 from repro.kernels.morph_fused import fused_supports, gradient2d_fused, morph2d_fused
@@ -56,12 +60,13 @@ def morph_1d_tpu(
     method: str = "auto",
     lane_strategy: LaneStrategy = "transpose_kernel",
     policy: DispatchPolicy | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """Kernel-backed running min/max along ``axis`` of a 2-D array."""
     w = check_window(w)
     op = as_op(op).name
     policy = policy or DispatchPolicy.calibrated()
+    interpret = resolve_interpret(interpret, policy)
     if x.ndim != 2:
         raise ValueError("morph_1d_tpu operates on (H, W); vmap for batches")
     axis = axis % 2
@@ -112,9 +117,10 @@ def _morph2d(
     method: str = "auto",
     lane_strategy: LaneStrategy = "transpose_kernel",
     policy: DispatchPolicy | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     policy = policy or DispatchPolicy.calibrated()
+    interpret = resolve_interpret(interpret, policy)
     if _use_fused(se, fused, policy) and x.ndim in (2, 3):
         return morph2d_fused(
             x, tuple(se), op=op, method=method if method in ("auto", "linear", "vhgw") else "auto",
@@ -151,7 +157,7 @@ def gradient2d_tpu(
     method: str = "auto",
     lane_strategy: LaneStrategy = "transpose_kernel",
     policy: DispatchPolicy | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """2-D morphological gradient (dilate - erode, widened for integers).
 
@@ -160,6 +166,7 @@ def gradient2d_tpu(
     two-pass dilate/erode pair and subtracts.
     """
     policy = policy or DispatchPolicy.calibrated()
+    interpret = resolve_interpret(interpret, policy)
     if _use_fused(se, fused, policy) and x.ndim in (2, 3):
         return gradient2d_fused(
             x, tuple(se),
@@ -177,9 +184,12 @@ def gradient2d_tpu(
     return d - e
 
 
-def gradient_1d_tpu(x: Array, w: int, *, axis: int = -2, interpret: bool = True) -> Array:
+def gradient_1d_tpu(
+    x: Array, w: int, *, axis: int = -2, interpret: bool | None = None
+) -> Array:
     """Fused 1-D morphological gradient (beyond-paper kernel)."""
     w = check_window(w)
+    interpret = resolve_interpret(interpret)
     if x.ndim != 2:
         raise ValueError("gradient_1d_tpu operates on (H, W); vmap for batches")
     if axis % 2 == 0:

@@ -1,2 +1,7 @@
-"""Serving substrate: batched prefill + generate over the KV cache."""
+"""Serving substrate — two engines, one story:
+
+* ``serve.engine``: batched LM decode (prefill + generate over the KV cache);
+* ``serve.morph``: async morphology serving (micro-batching, shape buckets,
+  executable cache, halo-correct tiling) over the fused 2-D kernels.
+"""
 from repro.serve.engine import generate, prefill

@@ -1,0 +1,54 @@
+"""Async morphology serving: shape-bucketed micro-batching, an LRU
+executable cache, and halo-correct tiling over the fused 2-D kernels.
+
+    with MorphService() as svc:
+        edges = svc.run_plan(img, "document_cleanup")["edges"]
+"""
+from repro.serve.morph.batcher import MicroBatcher
+from repro.serve.morph.buckets import (
+    DEFAULT_BUCKETS,
+    choose_bucket,
+    crop_from_bucket,
+    pad_to_bucket,
+    valid_rect,
+)
+from repro.serve.morph.plans import (
+    PLANS,
+    Plan,
+    Step,
+    build_executor,
+    document_cleanup_plan,
+    get_plan,
+    register_plan,
+    single_op_plan,
+)
+from repro.serve.morph.service import (
+    ExecutableCache,
+    MorphService,
+    ServiceConfig,
+    ServiceStats,
+)
+from repro.serve.morph.tiling import extract_tiles, run_tiled
+
+__all__ = [
+    "MicroBatcher",
+    "DEFAULT_BUCKETS",
+    "choose_bucket",
+    "crop_from_bucket",
+    "pad_to_bucket",
+    "valid_rect",
+    "PLANS",
+    "Plan",
+    "Step",
+    "build_executor",
+    "document_cleanup_plan",
+    "get_plan",
+    "register_plan",
+    "single_op_plan",
+    "ExecutableCache",
+    "MorphService",
+    "ServiceConfig",
+    "ServiceStats",
+    "extract_tiles",
+    "run_tiled",
+]

@@ -1,0 +1,129 @@
+"""Deadline-based micro-batcher: coalesce concurrent requests into stacks.
+
+Requests carry a *group key* (plan + bucket + dtype — anything that must
+match for images to share an executable). The single worker thread collects
+arrivals per key and dispatches a group when it reaches ``max_batch`` or its
+oldest member has waited ``window_s``, whichever comes first — the standard
+serving trade of a bounded latency tax for batch occupancy. All JAX
+dispatch happens on the worker thread; callers only touch numpy arrays and
+``concurrent.futures.Future`` results.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+_STOP = object()
+
+
+class MicroBatcher:
+    """Groups submitted requests by ``req.key`` and hands each group to
+    ``execute_group(key, requests)`` on a dedicated worker thread.
+
+    ``execute_group`` owns success paths (setting ``req.future`` results);
+    the batcher guarantees every request's future is resolved — exceptions
+    escaping ``execute_group`` are fanned out to the group's futures.
+    """
+
+    def __init__(
+        self,
+        execute_group: Callable[[Any, list], None],
+        *,
+        max_batch: int = 64,
+        window_s: float = 0.002,
+        name: str = "morph-batcher",
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._execute = execute_group
+        self.max_batch = max_batch
+        self.window_s = window_s
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._cv = threading.Condition()
+        self._outstanding = 0
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------ public API
+    def submit(self, req) -> None:
+        # put() while holding the lock: close() also takes it before
+        # enqueueing _STOP, so a request can never land behind a _STOP the
+        # worker has already consumed (SimpleQueue.put never blocks).
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._outstanding += 1
+            self._q.put(req)
+
+    def flush(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request has been dispatched."""
+        with self._cv:
+            return self._cv.wait_for(lambda: self._outstanding == 0, timeout=timeout)
+
+    def close(self) -> None:
+        """Drain remaining requests, then stop the worker."""
+        with self._cv:
+            if self._closed:
+                self._thread.join()
+                return
+            self._closed = True
+            self._q.put(_STOP)
+        self._thread.join()
+
+    # ---------------------------------------------------------- worker loop
+    def _poll(self, pending: dict, draining: bool):
+        if draining:
+            try:
+                return self._q.get_nowait()
+            except queue.Empty:
+                return None
+        if pending:
+            earliest = min(deadline for deadline, _ in pending.values())
+            timeout = max(0.0, earliest - time.monotonic())
+            try:
+                return self._q.get(timeout=timeout)
+            except queue.Empty:
+                return None
+        return self._q.get()  # idle: block until work or _STOP arrives
+
+    def _loop(self) -> None:
+        pending: dict[Any, tuple[float, list]] = {}
+        draining = False
+        while True:
+            item = self._poll(pending, draining)
+            if item is _STOP:
+                draining = True
+            elif item is not None:
+                if item.key not in pending:
+                    pending[item.key] = (time.monotonic() + self.window_s, [])
+                pending[item.key][1].append(item)
+            now = time.monotonic()
+            due = [
+                key
+                for key, (deadline, reqs) in pending.items()
+                if draining or deadline <= now or len(reqs) >= self.max_batch
+            ]
+            for key in due:
+                _, reqs = pending.pop(key)
+                for i in range(0, len(reqs), self.max_batch):
+                    self._dispatch(key, reqs[i : i + self.max_batch])
+            # submit() and close() enqueue under one lock, so every request
+            # precedes _STOP in the FIFO: seeing _STOP means the queue holds
+            # nothing else, and pending empty means everything dispatched.
+            if draining and not pending:
+                return
+
+    def _dispatch(self, key, reqs: list) -> None:
+        try:
+            self._execute(key, reqs)
+        except BaseException as exc:  # noqa: BLE001 — fan failure out to callers
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(exc)
+        finally:
+            with self._cv:
+                self._outstanding -= len(reqs)
+                self._cv.notify_all()

@@ -1,0 +1,65 @@
+"""Shape bucketing: pad every request up to a small fixed set of (H, W).
+
+A jitted morphology executable is specialized on its input shape, so serving
+raw request shapes means one compile per novel (H, W) — fatal under real
+traffic. Instead each image is padded up to the smallest bucket that holds
+it and the executable cache is keyed on the bucket, keeping a handful of hot
+executables for an unbounded space of request shapes.
+
+Correctness does NOT depend on the pad fill value: the plan executor
+(plans.py) re-masks everything outside each request's valid rectangle with
+the *next op's* neutral element before every primitive pass, which makes the
+pad region behave exactly like the kernels' own virtual neutral border —
+so cropping the bucket result back to (h, w) is bit-exact against running
+the op on the unpadded image, even for composed plans where a single fill
+value could not serve both min and max stages.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Ladder of (H, W) buckets. Lane-friendly widths (multiples of 128) so the
+# fused kernel's column grid pads nothing on top; (608, 896) covers the
+# paper's 600x800 experimental image with <2% waste.
+DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
+    (64, 128),
+    (128, 128),
+    (128, 256),
+    (256, 256),
+    (256, 512),
+    (512, 512),
+    (608, 896),
+    (1024, 1024),
+)
+
+
+def choose_bucket(
+    h: int, w: int, buckets: tuple[tuple[int, int], ...] = DEFAULT_BUCKETS
+) -> tuple[int, int] | None:
+    """Smallest-area bucket holding (h, w); None if nothing fits (-> tiling)."""
+    best = None
+    for bh, bw in buckets:
+        if bh >= h and bw >= w and (best is None or bh * bw < best[0] * best[1]):
+            best = (bh, bw)
+    return best
+
+
+def pad_to_bucket(img: np.ndarray, bucket: tuple[int, int]) -> np.ndarray:
+    """Zero-pad (h, w) bottom/right to bucket shape (fill value is irrelevant:
+    the executor masks outside the valid rect before every pass)."""
+    h, w = img.shape
+    bh, bw = bucket
+    if (h, w) == (bh, bw):
+        return img
+    out = np.zeros((bh, bw), dtype=img.dtype)
+    out[:h, :w] = img
+    return out
+
+
+def valid_rect(h: int, w: int) -> np.ndarray:
+    """[y0, y1, x0, x1) of the real data inside a bucket, for the executor."""
+    return np.array([0, h, 0, w], dtype=np.int32)
+
+
+def crop_from_bucket(out: np.ndarray, h: int, w: int) -> np.ndarray:
+    return out[:h, :w]

@@ -1,0 +1,199 @@
+"""Morphology plans: named multi-op chains compiled as one executable.
+
+A :class:`Plan` is the serving-side unit of work — a tuple of
+:class:`Step`s (``erode``/``dilate``/``opening``/``closing``/``gradient``,
+each with its own SE), with optional named outputs. The raw pipeline
+``data/images.py::cleanup_batch`` is ported here as the ``document_cleanup``
+plan (built from the same ``CLEANUP_STEPS`` constant), so the service and
+the direct path are verifiably the same computation.
+
+**Valid-rect masking.** Executors take ``(x, rect)`` where ``x`` is a
+``(B, H, W)`` bucket (or halo-extended tile) stack and ``rect`` a ``(B, 4)``
+``[y0, y1, x0, x1)`` per-image valid rectangle. Before *every* primitive
+pass, everything outside the rect is overwritten with that op's neutral
+element (max for erosion, min for dilation — ``core.types.MorphOp.neutral``).
+That makes the pad region indistinguishable from the kernels' own virtual
+neutral border at every stage of a composed plan, which is what buys:
+
+* bucket padding that is bit-exact after cropping, with an arbitrary fill
+  value (a single fill could never serve both min and max stages);
+* halo-correct tiling (tiling.py), where edge tiles mask the out-of-image
+  part of their halo the same way.
+
+The ``gradient`` step needs *both* neutrals on the same input, so it is
+executed as dilate(mask_min(x)) - erode(mask_max(x)) with the same integer
+widening as ``core.morphology.gradient`` / ``gradient2d_tpu``.
+
+Executors are plain jitted functions; the per-key cache with hit/miss
+counters lives in service.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import erode as core_erode
+from repro.core import dilate as core_dilate
+from repro.core.dispatch import DispatchPolicy, resolve_interpret
+from repro.core.types import MAX, MIN, check_window
+from repro.data.images import CLEANUP_STEPS
+from repro.kernels import dilate2d_tpu, erode2d_tpu
+
+_OPS = ("erode", "dilate", "opening", "closing", "gradient")
+Backend = str  # "jnp" (pure-XLA separable passes) | "kernel" (fused Pallas)
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One plan stage: a morphology op, its SE, and optional output tagging."""
+
+    op: str
+    se: tuple[int, int]
+    save_as: str | None = None
+    astype: str | None = None  # dtype name cast applied to the saved output
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"unknown plan op {self.op!r}; expected one of {_OPS}")
+        object.__setattr__(self, "se", (check_window(self.se[0]), check_window(self.se[1])))
+
+    def wings(self) -> tuple[int, int]:
+        return ((self.se[0] - 1) // 2, (self.se[1] - 1) // 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    name: str
+    steps: tuple[Step, ...]
+
+    def halo(self) -> tuple[int, int]:
+        """Per-axis halo a tile needs so its interior is exact after the whole
+        chain: contamination marches in one SE wing per sequential pass, so
+        wings sum over expanded primitives — opening/closing count twice,
+        gradient once (its min and max branches run in parallel)."""
+        gh = gw = 0
+        for s in self.steps:
+            wh, ww = s.wings()
+            mult = 2 if s.op in ("opening", "closing") else 1
+            gh += mult * wh
+            gw += mult * ww
+        return gh, gw
+
+    def output_names(self) -> tuple[str, ...]:
+        names = tuple(s.save_as for s in self.steps if s.save_as)
+        return names if names else ("out",)
+
+
+def single_op_plan(op: str, se: tuple[int, int]) -> Plan:
+    """The Plan a bare erode/dilate/opening/closing/gradient request becomes."""
+    return Plan(op, (Step(op, (int(se[0]), int(se[1]))),))
+
+
+def document_cleanup_plan() -> Plan:
+    """data/images.py::cleanup_batch as a Plan: opening -> closing (saved as
+    ``clean``) -> gradient cast to u8 (saved as ``edges``)."""
+    (op0, se0), (op1, se1), (op2, se2) = CLEANUP_STEPS
+    return Plan(
+        "document_cleanup",
+        (
+            Step(op0, se0),
+            Step(op1, se1, save_as="clean"),
+            Step(op2, se2, save_as="edges", astype="uint8"),
+        ),
+    )
+
+
+PLANS: dict[str, Plan] = {"document_cleanup": document_cleanup_plan()}
+
+
+def get_plan(plan: "str | Plan") -> Plan:
+    if isinstance(plan, Plan):
+        return plan
+    try:
+        return PLANS[plan]
+    except KeyError:
+        raise KeyError(f"unknown plan {plan!r}; registered: {sorted(PLANS)}") from None
+
+
+def register_plan(plan: Plan) -> Plan:
+    PLANS[plan.name] = plan
+    return plan
+
+
+def _expand(step: Step) -> tuple[tuple[str, tuple[int, int]], ...]:
+    """Composite -> primitive (min/max, se) sequence. ``gradient`` stays
+    special-cased in the executor (parallel branches, widened difference)."""
+    if step.op == "erode":
+        return (("min", step.se),)
+    if step.op == "dilate":
+        return (("max", step.se),)
+    if step.op == "opening":
+        return (("min", step.se), ("max", step.se))
+    if step.op == "closing":
+        return (("max", step.se), ("min", step.se))
+    raise ValueError(f"_expand does not handle {step.op!r}")
+
+
+def mask_outside(x: jnp.ndarray, rect: jnp.ndarray, neutral) -> jnp.ndarray:
+    """Overwrite everything outside each image's [y0,y1)x[x0,x1) with
+    ``neutral`` — the trace-time-shaped, data-dependent analog of the
+    kernels' virtual border padding."""
+    _, h, w = x.shape
+    rows = jnp.arange(h, dtype=jnp.int32)[None, :, None]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, None, :]
+    y0, y1, x0, x1 = (rect[:, i][:, None, None] for i in range(4))
+    valid = (rows >= y0) & (rows < y1) & (cols >= x0) & (cols < x1)
+    return jnp.where(valid, x, jnp.asarray(neutral, x.dtype))
+
+
+def build_executor(
+    plan: Plan,
+    *,
+    backend: Backend = "jnp",
+    policy: DispatchPolicy | None = None,
+    interpret: bool | None = None,
+):
+    """Jitted ``(x (B,H,W), rect (B,4)) -> {name: (B,H,W) array}`` executor.
+
+    ``backend="kernel"`` routes primitives through the fused Pallas
+    megakernel (PR 1); ``"jnp"`` through the pure-XLA separable passes —
+    bit-exact by the kernels' oracle contract, so the choice is purely a
+    deployment decision (service.py picks per backend/interpret mode).
+    """
+    policy = policy or DispatchPolicy.calibrated()
+    interpret = resolve_interpret(interpret, policy)
+    if backend not in ("jnp", "kernel"):
+        raise ValueError(f"backend must be 'jnp'|'kernel', got {backend!r}")
+
+    def prim(x, opname, se):
+        if backend == "kernel":
+            fn = erode2d_tpu if opname == "min" else dilate2d_tpu
+            return fn(x, se, policy=policy, interpret=interpret)
+        fn = core_erode if opname == "min" else core_dilate
+        return fn(x, se, policy=policy)
+
+    def run(x, rect):
+        outs = {}
+        for step in plan.steps:
+            if step.op == "gradient":
+                d = prim(mask_outside(x, rect, MAX.neutral(x.dtype)), "max", step.se)
+                e = prim(mask_outside(x, rect, MIN.neutral(x.dtype)), "min", step.se)
+                if jnp.issubdtype(x.dtype, jnp.integer):
+                    y = d.astype(jnp.int32) - e.astype(jnp.int32)
+                else:
+                    y = d - e
+            else:
+                y = x
+                for opname, se in _expand(step):
+                    op = MIN if opname == "min" else MAX
+                    y = prim(mask_outside(y, rect, op.neutral(y.dtype)), opname, se)
+            if step.save_as:
+                outs[step.save_as] = y.astype(step.astype) if step.astype else y
+            x = y
+        if not outs:
+            outs["out"] = x
+        return outs
+
+    return jax.jit(run)

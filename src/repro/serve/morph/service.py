@@ -1,0 +1,314 @@
+"""MorphService: the async front door over the fused morphology kernels.
+
+Mirrors the LM engine (serve/engine.py) one layer up: where that engine
+batches decode steps over a KV cache, this one batches single-image
+morphology requests into (B, H, W) stacks. A request flows:
+
+    submit(img, op/plan)
+      -> bucket  (buckets.py: pad up to a fixed (H, W) ladder)   } cache-
+      -> batch   (batcher.py: coalesce within a deadline window) } friendly
+      -> execute (plans.py executor from the LRU executable cache)
+      -> crop + resolve the Future
+
+Images too large for the ladder take the tiled route (tiling.py) through
+the same executor cache. The executable cache is keyed on
+``(plan, shape, dtype, batch-bucket, policy.cache_token(), backend,
+interpret)`` with hit/miss/eviction counters; batch sizes are bucketed to
+powers of two so B-variance cannot silently multiply compiles.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import DispatchPolicy, resolve_interpret
+from repro.serve.morph.batcher import MicroBatcher
+from repro.serve.morph.buckets import (
+    DEFAULT_BUCKETS,
+    choose_bucket,
+    crop_from_bucket,
+    valid_rect,
+)
+from repro.serve.morph.plans import Plan, build_executor, get_plan, single_op_plan
+from repro.serve.morph.tiling import run_tiled
+
+
+def _round_up_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class ExecutableCache:
+    """LRU over built (jitted) plan executors, with observable counters.
+
+    One entry == one compile of one executable (keys include the padded
+    batch size), so ``misses`` is exactly the compile count the service has
+    paid — the number the bucket ladder exists to keep small.
+    """
+
+    def __init__(self, max_size: int = 128):
+        self.max_size = max_size
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, builder):
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.misses += 1
+        value = builder()  # build outside the lock; benign duplicate on race
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_size:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        return value
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "size": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
+
+
+class ServiceStats:
+    """Rolling serving metrics: throughput, latency quantiles, occupancy."""
+
+    def __init__(self, window: int = 4096):
+        self._lock = threading.Lock()
+        self._latencies = collections.deque(maxlen=window)
+        self._done_ts = collections.deque(maxlen=window)
+        self._batch_sizes = collections.deque(maxlen=window)
+        self.requests = 0
+        self.batches = 0
+        self.tiled_requests = 0
+
+    def record_batch(self, latencies_s) -> None:
+        now = time.monotonic()
+        with self._lock:
+            self.requests += len(latencies_s)
+            self.batches += 1
+            self._batch_sizes.append(len(latencies_s))
+            self._latencies.extend(latencies_s)
+            self._done_ts.extend([now] * len(latencies_s))
+
+    def record_tiled(self, latencies_s) -> None:
+        """Tiled requests never ride the batcher's stacks — count their
+        latency/throughput but keep them out of the occupancy metrics."""
+        now = time.monotonic()
+        with self._lock:
+            self.requests += len(latencies_s)
+            self.tiled_requests += len(latencies_s)
+            self._latencies.extend(latencies_s)
+            self._done_ts.extend([now] * len(latencies_s))
+
+    def snapshot(self, max_batch: int) -> dict:
+        with self._lock:
+            lat = np.asarray(self._latencies, dtype=np.float64)
+            ts = list(self._done_ts)
+            sizes = np.asarray(self._batch_sizes, dtype=np.float64)
+        span = (ts[-1] - ts[0]) if len(ts) > 1 else 0.0
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "tiled_requests": self.tiled_requests,
+            "img_per_s": (len(ts) - 1) / span if span > 0 else 0.0,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+            "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
+            "occupancy": float(sizes.mean()) / max_batch if sizes.size else 0.0,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    buckets: tuple[tuple[int, int], ...] = DEFAULT_BUCKETS
+    max_batch: int = 64
+    window_ms: float = 2.0
+    tile_interior: tuple[int, int] = (512, 512)
+    max_tiles_per_launch: int = 16
+    backend: str = "auto"  # "kernel" (fused Pallas) | "jnp" | "auto"
+    policy: DispatchPolicy | None = None
+    interpret: bool | None = None
+    cache_size: int = 128
+    stats_window: int = 4096
+
+
+@dataclasses.dataclass
+class _Request:
+    key: tuple
+    img: np.ndarray
+    plan: Plan
+    bucket: tuple[int, int] | None  # None -> tiled route
+    future: Future
+    t_submit: float
+
+
+class MorphService:
+    """Async morphology serving engine. Use as a context manager:
+
+        with MorphService() as svc:
+            fut = svc.submit(img, op="erode", se=(5, 5))
+            clean = svc.run_plan(img2, "document_cleanup")["clean"]
+    """
+
+    def __init__(self, config: ServiceConfig | None = None):
+        self.config = config or ServiceConfig()
+        self.policy = self.config.policy or DispatchPolicy.calibrated()
+        self.interpret = resolve_interpret(self.config.interpret, self.policy)
+        if self.config.backend == "auto":
+            # Compiled Mosaic -> fused megakernel; interpret mode (CPU CI,
+            # laptops) -> the pure-XLA separable path, which is bit-exact
+            # and far faster than interpreting Pallas.
+            self.backend = "jnp" if self.interpret else "kernel"
+        else:
+            self.backend = self.config.backend
+        self.cache = ExecutableCache(self.config.cache_size)
+        self._stats = ServiceStats(self.config.stats_window)
+        self._batcher = MicroBatcher(
+            self._execute_group,
+            max_batch=self.config.max_batch,
+            window_s=self.config.window_ms / 1e3,
+        )
+
+    # ------------------------------------------------------------ submission
+    def submit(self, img, op: str = "erode", se=(3, 3)) -> Future:
+        """Single-op request; resolves to the cropped result array."""
+        return self.submit_plan(img, single_op_plan(op, se))
+
+    def submit_plan(self, img, plan: "str | Plan") -> Future:
+        """Plan request; resolves to an array (single-output plans) or a
+        ``{name: array}`` dict (plans with named outputs)."""
+        plan = get_plan(plan)
+        img = np.asarray(img)
+        if img.ndim != 2:
+            raise ValueError("the service takes single (H, W) images; submit "
+                             "each image of a batch separately")
+        bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
+        if bucket is None:
+            gh, gw = plan.halo()
+            ext = (self.config.tile_interior[0] + 2 * gh,
+                   self.config.tile_interior[1] + 2 * gw)
+            key = ("tiled", plan, ext, img.dtype.str)
+        else:
+            key = ("bucket", plan, bucket, img.dtype.str)
+        req = _Request(key, img, plan, bucket, Future(), time.monotonic())
+        self._batcher.submit(req)
+        return req.future
+
+    def run(self, img, op: str = "erode", se=(3, 3)):
+        return self.submit(img, op, se).result()
+
+    def run_plan(self, img, plan: "str | Plan"):
+        return self.submit_plan(img, plan).result()
+
+    def run_batch(self, imgs, plan: "str | Plan") -> list:
+        """Synchronous convenience: submit all, wait for all, keep order."""
+        futures = [self.submit_plan(im, plan) for im in imgs]
+        return [f.result() for f in futures]
+
+    # ------------------------------------------------------------- execution
+    def _executor_for(self, plan: Plan, shape: tuple[int, int], dtype, batch: int):
+        key = (
+            plan,
+            shape,
+            np.dtype(dtype).str,
+            batch,
+            self.policy.cache_token(),
+            self.backend,
+            self.interpret,
+        )
+        return self.cache.get(
+            key,
+            lambda: build_executor(
+                plan,
+                backend=self.backend,
+                policy=self.policy,
+                interpret=self.interpret,
+            ),
+        )
+
+    def _execute_group(self, key, reqs: list) -> None:
+        if key[0] == "tiled":
+            self._execute_tiled(reqs)
+        else:
+            self._execute_bucketed(key, reqs)
+
+    def _execute_bucketed(self, key, reqs: list) -> None:
+        _, plan, bucket, _ = key
+        bb = min(_round_up_pow2(len(reqs)), self.config.max_batch)
+        batch = np.zeros((bb, *bucket), dtype=reqs[0].img.dtype)
+        rects = np.zeros((bb, 4), dtype=np.int32)
+        for i, r in enumerate(reqs):
+            h, w = r.img.shape
+            batch[i, :h, :w] = r.img  # rows past len(reqs) keep an empty rect
+            rects[i] = valid_rect(h, w)
+        execute = self._executor_for(plan, bucket, batch.dtype, bb)
+        outs = {k: np.asarray(v) for k, v in
+                execute(jnp.asarray(batch), jnp.asarray(rects)).items()}
+        names = plan.output_names()
+        for i, r in enumerate(reqs):
+            h, w = r.img.shape
+            cropped = {
+                name: crop_from_bucket(outs[name][i], h, w) for name in names
+            }
+            r.future.set_result(cropped["out"] if names == ("out",) else cropped)
+        now = time.monotonic()
+        self._stats.record_batch([now - r.t_submit for r in reqs])
+
+    def _execute_tiled(self, reqs: list) -> None:
+        for r in reqs:
+            gh, gw = r.plan.halo()
+            ext = (self.config.tile_interior[0] + 2 * gh,
+                   self.config.tile_interior[1] + 2 * gw)
+
+            def execute(tiles, rects):
+                fn = self._executor_for(r.plan, ext, tiles.dtype, tiles.shape[0])
+                return fn(jnp.asarray(tiles), jnp.asarray(rects))
+
+            outs = run_tiled(
+                r.img,
+                r.plan,
+                execute,
+                tile_interior=self.config.tile_interior,
+                launch_batch=self.config.max_tiles_per_launch,
+            )
+            names = r.plan.output_names()
+            r.future.set_result(outs["out"] if names == ("out",) else outs)
+            self._stats.record_tiled([time.monotonic() - r.t_submit])
+
+    # -------------------------------------------------------------- lifecycle
+    def stats(self) -> dict:
+        snap = self._stats.snapshot(self.config.max_batch)
+        snap["cache"] = self.cache.snapshot()
+        snap["backend"] = self.backend
+        snap["interpret"] = self.interpret
+        return snap
+
+    def flush(self, timeout: float | None = None) -> bool:
+        return self._batcher.flush(timeout)
+
+    def close(self) -> None:
+        self._batcher.close()
+
+    def __enter__(self) -> "MorphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,116 @@
+"""Halo-correct tiled execution for images beyond one launch's budget.
+
+An image too large for the bucket ladder is split into a grid of interior
+tiles of fixed size ``(th, tw)``; each tile is read with a halo of the
+plan's total contamination radius (``Plan.halo()`` — SE wings summed over
+sequential passes), executed through the same masked executor as bucketed
+requests, and only the tile *interior* is stitched back. Because:
+
+* the halo supplies exact neighbor data for every sequential pass, and
+* the part of a border tile's halo that falls outside the image is masked
+  to each op's neutral element before every pass (plans.mask_outside),
+
+the stitched result is bit-exact against running the plan on the whole
+image — including when an SE is larger than the halo-free tile interior.
+
+Every extended tile has the same shape ``(th + 2*gh, tw + 2*gw)`` and tiles
+are executed in fixed-size launch batches (the last one padded with dummy
+tiles whose valid rect is empty), so tiled traffic reuses a single cached
+executable per (plan, tile shape, dtype) exactly like bucketed traffic.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.serve.morph.plans import Plan
+
+
+def tile_counts(h: int, w: int, interior: tuple[int, int]) -> tuple[int, int]:
+    th, tw = interior
+    return math.ceil(h / th), math.ceil(w / tw)
+
+
+def extract_tiles(
+    img: np.ndarray, plan: Plan, interior: tuple[int, int]
+) -> tuple[np.ndarray, np.ndarray, list[tuple[int, int, int, int]]]:
+    """Split (H, W) into halo-extended tiles.
+
+    Returns ``(tiles (N, eh, ew), rects (N, 4), interiors)`` where ``rects``
+    are the in-image valid rectangles in extended-tile coordinates and
+    ``interiors`` the (y0, x0, ih, iw) image regions each tile owns.
+    """
+    if img.ndim != 2:
+        raise ValueError("extract_tiles operates on a single (H, W) image")
+    gh, gw = plan.halo()
+    th, tw = interior
+    eh, ew = th + 2 * gh, tw + 2 * gw
+    h, w = img.shape
+    ny, nx = tile_counts(h, w, interior)
+    # One zero-padded copy; the fill never leaks because the executor masks
+    # outside each tile's valid rect before every pass.
+    padded = np.zeros((gh + ny * th + gh, gw + nx * tw + gw), dtype=img.dtype)
+    padded[gh : gh + h, gw : gw + w] = img
+    tiles, rects, interiors = [], [], []
+    for ty in range(ny):
+        for tx in range(nx):
+            y0, x0 = ty * th, tx * tw
+            tiles.append(padded[y0 : y0 + eh, x0 : x0 + ew])
+            rects.append(
+                [
+                    max(0, gh - y0),
+                    min(eh, h - y0 + gh),
+                    max(0, gw - x0),
+                    min(ew, w - x0 + gw),
+                ]
+            )
+            interiors.append((y0, x0, min(th, h - y0), min(tw, w - x0)))
+    return (
+        np.stack(tiles),
+        np.asarray(rects, dtype=np.int32),
+        interiors,
+    )
+
+
+def run_tiled(
+    img: np.ndarray,
+    plan: Plan,
+    execute,
+    *,
+    tile_interior: tuple[int, int],
+    launch_batch: int,
+) -> dict[str, np.ndarray]:
+    """Execute ``plan`` over ``img`` in halo tiles and stitch the interiors.
+
+    ``execute(tiles (B, eh, ew), rects (B, 4)) -> {name: (B, eh, ew)}`` is
+    the (cached, jitted) executor call — always invoked with ``B`` from the
+    power-of-two ladder below ``launch_batch``, short chunks padded with
+    dummy tiles (empty valid rect), so a handful of executables serves any
+    image size instead of one compile per distinct tile count.
+    """
+    gh, gw = plan.halo()
+    th, tw = tile_interior
+    tiles, rects, interiors = extract_tiles(img, plan, tile_interior)
+    n = tiles.shape[0]
+    launch_batch = max(1, min(launch_batch, 1 << (n - 1).bit_length() if n else 1))
+    outs: dict[str, np.ndarray] = {}
+    h, w = img.shape
+    for i0 in range(0, n, launch_batch):
+        chunk = tiles[i0 : i0 + launch_batch]
+        crect = rects[i0 : i0 + launch_batch]
+        pad = launch_batch - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate([chunk, np.zeros((pad, *chunk.shape[1:]), chunk.dtype)])
+            crect = np.concatenate([crect, np.zeros((pad, 4), np.int32)])
+        res = execute(chunk, crect)
+        for name, val in res.items():
+            val = np.asarray(val)
+            if name not in outs:
+                outs[name] = np.empty((h, w), dtype=val.dtype)
+            for j in range(min(launch_batch, n - i0)):
+                y0, x0, ih, iw = interiors[i0 + j]
+                outs[name][y0 : y0 + ih, x0 : x0 + iw] = val[
+                    j, gh : gh + ih, gw : gw + iw
+                ]
+    return outs

@@ -143,6 +143,26 @@ def test_gradient2d_fused_vs_ref(dtype):
         np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("dtype", [np.uint8, np.int8])
+@pytest.mark.parametrize("se", [(3, 3), (3, 9), (9, 3), (9, 9)])
+def test_gradient_integer_widening_consistent_across_paths(dtype, se):
+    """Fused and two-pass gradient2d_tpu must agree on integer widening
+    (u8/i8 -> i32) for SEs on BOTH sides of the w0_fused crossover — a
+    w0_fused=5 policy puts 3-wide passes on the linear side and 9-wide
+    passes on the vHGW side without needing giant SEs."""
+    x = rand((40, 60), dtype)
+    policy = DispatchPolicy(w0_fused=5)
+    fused = np.asarray(gradient2d_tpu(x, se, fused=True, policy=policy))
+    two_pass = np.asarray(gradient2d_tpu(x, se, fused=False, policy=policy))
+    assert fused.dtype == np.int32
+    assert two_pass.dtype == np.int32
+    np.testing.assert_array_equal(fused, two_pass)
+    # floats keep their dtype on both paths
+    xf = rand((40, 60), np.float32)
+    assert gradient2d_tpu(xf, se, fused=True, policy=policy).dtype == np.float32
+    assert gradient2d_tpu(xf, se, fused=False, policy=policy).dtype == np.float32
+
+
 def test_gradient2d_tpu_paths_agree():
     x = rand((3, 70, 90), np.uint8)
     two_pass = jnp.stack([gradient2d_tpu(x[i], (5, 5), fused=False) for i in range(3)])
