@@ -1,0 +1,108 @@
+"""Expression-IR lowering overhead microbenchmark (§Perf guardrail).
+
+The unified morphology API routes every operator through graph construction
++ a lowering pass. That must cost nothing where it matters: post-jit
+steady-state must match a hand-written jnp chain (the graphs trace to the
+same XLA program), and the trace-time tax (build expr -> evaluate -> trace)
+must stay microscopic next to one compile. This harness measures:
+
+* ``build_us``     — expr construction + ``to_plan`` (graph + halo traversal);
+* ``lower_us``     — un-jitted lowering walk (trace-time overhead proxy);
+* ``ir_call_us``   / ``hand_call_us`` — jitted steady-state, IR-lowered vs
+  hand-written composition (ratio ~1.0 is the acceptance bar);
+
+and writes ``benchmarks/results/BENCH_expr.json`` (rendered by
+``benchmarks.report``).
+
+    PYTHONPATH=src python -m benchmarks.bench_expr [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import closing, erode as core_erode, gradient, opening
+from repro.morph import X, halo, lower_xla, node_count, to_plan
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "BENCH_expr.json")
+
+def _hand_cleanup(x):
+    return gradient(closing(opening(x, (3, 3)), (5, 5)), (3, 3))
+
+
+def _median_us(fn, iters: int) -> float:
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(quick: bool = False) -> list[dict]:
+    shape = (128, 128) if quick else (600, 800)
+    warmup, iters = (1, 3) if quick else (2, 10)
+    build_iters = 20 if quick else 200
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+    cases = [
+        ("erode_3x3", X.erode((3, 3)), lambda v: core_erode(v, (3, 3))),
+        (
+            "cleanup_chain",
+            X.opening((3, 3)).closing((5, 5)).gradient((3, 3)),
+            _hand_cleanup,
+        ),
+    ]
+    rows = []
+    for name, expr, hand in cases:
+        build_us = _median_us(lambda: to_plan(expr, name=name).halo(), build_iters)
+        lower_us = _median_us(lambda: lower_xla(expr), build_iters)
+        ir_fn = jax.jit(lower_xla(expr))
+        hand_fn = jax.jit(hand)
+        t_ir = time_fn(ir_fn, x, warmup=warmup, iters=iters)
+        t_hand = time_fn(hand_fn, x, warmup=warmup, iters=iters)
+        row = {
+            "case": name,
+            "shape": list(shape),
+            "nodes": node_count(expr),
+            "halo": list(halo(expr)),
+            "build_us": build_us,
+            "lower_us": lower_us,
+            "ir_call_us": t_ir * 1e6,
+            "hand_call_us": t_hand * 1e6,
+            "ir_vs_hand": t_ir / t_hand if t_hand else float("nan"),
+        }
+        rows.append(row)
+        emit(
+            f"expr_{name}", t_ir * 1e6,
+            f"ir/hand={row['ir_vs_hand']:.3f}x build={build_us:.1f}us "
+            f"nodes={row['nodes']}",
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / few iters (CI smoke)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        # quick runs get their own file so they never clobber the full record
+        args.out = RESULTS.replace(".json", "_quick.json") if args.quick else RESULTS
+    rows = run(quick=args.quick)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,25 @@ def serve_table(path: str) -> str:
     return "\n".join(out)
 
 
+def expr_table(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["### Expression-IR lowering overhead (graph API vs hand-written)", "",
+           "| case | nodes | halo | build+halo us | lower us | "
+           "IR call us | hand call us | IR/hand |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['case']} | {r['nodes']} | {tuple(r['halo'])} "
+            f"| {r['build_us']:.1f} | {r['lower_us']:.1f} "
+            f"| {r['ir_call_us']:.1f} | {r['hand_call_us']:.1f} "
+            f"| **{r['ir_vs_hand']:.3f}x** |")
+    out.append("")
+    out.append("post-jit the IR lowers to the same XLA program as the "
+               "hand-written chain; build/lower are one-time trace costs.")
+    return "\n".join(out)
+
+
 def roofline_table(path: str) -> str:
     with open(path) as f:
         rows = json.load(f)
@@ -124,6 +143,10 @@ def main():
         parts.append(serve_table(f"{base}/BENCH_serve.json"))
     except FileNotFoundError:
         parts.append("serving results missing (run benchmarks.bench_serve)")
+    try:
+        parts.append(expr_table(f"{base}/BENCH_expr.json"))
+    except FileNotFoundError:
+        parts.append("expr-IR results missing (run benchmarks.bench_expr)")
     try:
         parts.append(roofline_table(f"{base}/roofline.json"))
     except FileNotFoundError:

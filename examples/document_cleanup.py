@@ -69,6 +69,30 @@ same_edges = all(
 print(f"service == direct: clean {same_clean}, edges {same_edges} "
       f"(bucket-padded, micro-batched, bit-exact)")
 
+# ------------------------------------------------- unified expression API
+# The same chain as one expression graph: build once, lower anywhere. The
+# service compiles the identical graph the direct path jits, and iterative
+# operators (reconstruction) ride the same route via BoundedIter plans.
+from repro.morph import X, lower_xla, reconstruct_by_dilation_expr, to_plan
+
+chain = X.opening((3, 3)).closing((5, 5))
+edges_expr = chain.gradient((3, 3)).astype("uint8")
+plan = to_plan({"clean": chain, "edges": edges_expr}, name="cleanup_expr")
+print(f"expr plan: halo={plan.halo()} outputs={plan.output_names()}")
+
+direct_expr = lower_xla({"clean": chain, "edges": edges_expr})(jnp.asarray(imgs))
+with MorphService(svc_cfg) as svc:
+    res = svc.run_plan(imgs[0], plan)
+same = np.array_equal(res["edges"], np.asarray(direct_expr["edges"][0]))
+print(f"expr-built plan == direct lowering: {same}")
+
+recon = reconstruct_by_dilation_expr(X.erode((7, 7)), X, (3, 3),
+                                     iters=64, until_stable=False)
+with MorphService(svc_cfg) as svc:
+    opened = svc.run_expr(imgs[0], recon, name="open_by_reconstruction")
+print(f"served opening-by-reconstruction (bounded 64 iters): {opened.shape} "
+      f"{opened.dtype} — iterative operators are servable now")
+
 emb = patch_embed_stub(jnp.asarray(clean), d_model=256, n_tokens=256)
 print(f"vision-tower stub tokens: {emb.shape} "
       f"(these feed VLM cross-attention layers)")

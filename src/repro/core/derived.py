@@ -1,8 +1,10 @@
 """Derived morphological operators (paper §2: "other morphological
 operations ... can be expressed via erosion, dilation and arithmetical
-operations"). Everything here composes the fast separable primitives, so
-every operator inherits the hybrid vHGW/linear/tree dispatch and the
-Pallas kernels underneath.
+operations"). Each operator is its expression graph (``repro.morph``)
+lowered through the XLA pass, so everything here inherits the hybrid
+vHGW/linear/tree dispatch — and the *same* graphs are what make these
+operators servable (``repro.morph.to_plan`` compiles reconstruction/OCCO
+chains into bounded-iteration serving plans).
 
 Included: geodesic dilation/erosion, morphological reconstruction
 (by dilation and by erosion), h-maxima/h-minima, the open-close /
@@ -12,58 +14,57 @@ standard texture descriptor built from an opening scale-sweep.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.morphology import closing, dilate, erode, opening
+from repro.core.morphology import opening
 from repro.core.types import Array
+
+
+def _lower(outputs):
+    from repro.morph.lower_xla import lower_xla
+
+    return lower_xla(outputs)
+
+
+def _exprs():
+    from repro import morph as ir
+
+    return ir
 
 
 def geodesic_dilate(marker: Array, mask: Array, se=(3, 3)) -> Array:
     """One geodesic step: dilate the marker, clamp under the mask."""
-    return jnp.minimum(dilate(marker, se), mask)
+    ir = _exprs()
+    expr = ir.geodesic_dilate_expr(ir.Var("marker"), ir.Var("mask"), se)
+    return _lower(expr)(marker=marker, mask=mask)
 
 
 def geodesic_erode(marker: Array, mask: Array, se=(3, 3)) -> Array:
-    return jnp.maximum(erode(marker, se), mask)
+    ir = _exprs()
+    expr = ir.geodesic_erode_expr(ir.Var("marker"), ir.Var("mask"), se)
+    return _lower(expr)(marker=marker, mask=mask)
 
 
 def reconstruct_by_dilation(marker: Array, mask: Array, se=(3, 3),
                             *, max_iters: int = 256) -> Array:
     """Morphological reconstruction: iterate geodesic dilation to
-    stability (lax.while_loop; converges in <= image-diameter steps)."""
-    marker = jnp.minimum(marker, mask)
-
-    def cond(state):
-        prev, cur, i = state
-        return jnp.logical_and(i < max_iters, jnp.any(prev != cur))
-
-    def body(state):
-        _, cur, i = state
-        return cur, geodesic_dilate(cur, mask, se), i + 1
-
-    _, out, _ = jax.lax.while_loop(
-        cond, body, (marker, geodesic_dilate(marker, mask, se), jnp.int32(0))
+    stability (a bounded ``while_loop``; converges in <= image-diameter
+    steps). The graph is ``reconstruct_by_dilation_expr`` — the same node
+    the serving engine compiles into bounded-iteration plans."""
+    ir = _exprs()
+    expr = ir.reconstruct_by_dilation_expr(
+        ir.Var("marker"), ir.Var("mask"), se, iters=max_iters, until_stable=True
     )
-    return out
+    return _lower(expr)(marker=marker, mask=mask)
 
 
 def reconstruct_by_erosion(marker: Array, mask: Array, se=(3, 3),
                            *, max_iters: int = 256) -> Array:
-    marker = jnp.maximum(marker, mask)
-
-    def cond(state):
-        prev, cur, i = state
-        return jnp.logical_and(i < max_iters, jnp.any(prev != cur))
-
-    def body(state):
-        _, cur, i = state
-        return cur, geodesic_erode(cur, mask, se), i + 1
-
-    _, out, _ = jax.lax.while_loop(
-        cond, body, (marker, geodesic_erode(marker, mask, se), jnp.int32(0))
+    ir = _exprs()
+    expr = ir.reconstruct_by_erosion_expr(
+        ir.Var("marker"), ir.Var("mask"), se, iters=max_iters, until_stable=True
     )
-    return out
+    return _lower(expr)(marker=marker, mask=mask)
 
 
 def h_maxima(x: Array, h: int, se=(3, 3)) -> Array:
@@ -82,26 +83,28 @@ def h_minima(x: Array, h: int, se=(3, 3)) -> Array:
 
 def open_close(x: Array, se=(3, 3)) -> Array:
     """OC smoothing: removes bright then dark impulse noise."""
-    return closing(opening(x, se), se)
+    ir = _exprs()
+    return _lower(ir.X.opening(se).closing(se))(x)
 
 
 def close_open(x: Array, se=(3, 3)) -> Array:
-    return opening(closing(x, se), se)
+    ir = _exprs()
+    return _lower(ir.X.closing(se).opening(se))(x)
 
 
 def occo(x: Array, se=(3, 3)) -> Array:
     """OCCO filter: average of OC and CO — the standard self-dual-ish
-    morphological smoother (integer-safe midpoint)."""
-    a = open_close(x, se).astype(jnp.int32)
-    b = close_open(x, se).astype(jnp.int32)
-    return ((a + b) // 2).astype(x.dtype) if jnp.issubdtype(
-        x.dtype, jnp.integer) else ((a + b) / 2).astype(x.dtype)
+    morphological smoother (integer-safe midpoint via the IR ``Mean``)."""
+    ir = _exprs()
+    return _lower(ir.occo_expr(ir.X, se))(x)
 
 
 def laplacian(x: Array, se=(3, 3)) -> Array:
-    """Morphological Laplacian: (dilate - x) - (x - erode)."""
-    xi = x.astype(jnp.int32)
-    return (dilate(x, se).astype(jnp.int32) - xi) - (xi - erode(x, se).astype(jnp.int32))
+    """Morphological Laplacian: (dilate - x) - (x - erode), each difference
+    in the centralized widened dtype."""
+    ir = _exprs()
+    expr = (ir.X.dilate(se) - ir.X) - (ir.X - ir.X.erode(se))
+    return _lower(expr)(x)
 
 
 def granulometry(x: Array, sizes=(3, 5, 9, 15, 21)) -> Array:

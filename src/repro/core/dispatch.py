@@ -77,6 +77,16 @@ class DispatchPolicy:
     # default (see resolve_interpret). Part of the policy so serving cache
     # keys capture it.
     interpret: bool | None = None
+    # Force a specific 1-D algorithm for every pass ("auto" = threshold
+    # dispatch via w0_*/small_method). Collapses the old per-call ``method=``
+    # kwarg into the policy, so cache keys capture it too. The Pallas paths
+    # implement only the linear/vhgw pair; a forced linear_tree/linear_paired
+    # runs the kernels' linear ladder there (nearest same-family analog).
+    method: Method = "auto"
+    # Lane-axis strategy for the two-pass kernel pipeline: the paper's §5.2
+    # transpose-kernel sandwich or an XLA transpose (§Perf A/B). Collapses
+    # the old per-call ``lane_strategy=`` kwarg.
+    lane_strategy: str = "transpose_kernel"  # "transpose_kernel" | "xla"
     # Crossover for passes inside the fused megakernel. Much higher than
     # w0_major: the fused linear ladder is slice-reductions over a
     # VMEM-resident strip that the compiler fuses into one loop nest, while
@@ -95,6 +105,33 @@ class DispatchPolicy:
         return tuple(
             (f.name, getattr(self, f.name)) for f in dataclasses.fields(self)
         )
+
+    def with_overrides(
+        self,
+        *,
+        fused: bool | None = None,
+        method: "Method | None" = None,
+        lane_strategy: str | None = None,
+        interpret: bool | None = None,
+    ) -> "DispatchPolicy":
+        """Fold the deprecated per-call kwargs into a policy value.
+
+        The kernel entry points (``kernels/ops.py``) and ``core.morphology``
+        keep their old ``fused=`` / ``method=`` / ``lane_strategy=`` /
+        ``interpret=`` keywords as shims; each non-default value becomes the
+        corresponding policy field so one ``DispatchPolicy`` carries every
+        dispatch decision (``method="auto"`` and ``None`` mean "no change").
+        """
+        changes: dict = {}
+        if fused is not None:
+            changes["fused_2d"] = bool(fused)
+        if method is not None and method != "auto":
+            changes["method"] = method
+        if lane_strategy is not None:
+            changes["lane_strategy"] = lane_strategy
+        if interpret is not None:
+            changes["interpret"] = bool(interpret)
+        return dataclasses.replace(self, **changes) if changes else self
 
     @classmethod
     def paper(cls) -> "DispatchPolicy":
@@ -139,7 +176,10 @@ def morph_1d(
     w = check_window(w)
     if method == "auto":
         policy = policy or DispatchPolicy.calibrated()
-        minor = (axis % x.ndim) == x.ndim - 1
-        w0 = policy.w0_minor if minor else policy.w0_major
-        method = policy.small_method if w <= w0 else "vhgw"
+        if policy.method != "auto":
+            method = policy.method
+        else:
+            minor = (axis % x.ndim) == x.ndim - 1
+            w0 = policy.w0_minor if minor else policy.w0_major
+            method = policy.small_method if w <= w0 else "vhgw"
     return _METHODS[method](x, w, axis=axis, op=op)

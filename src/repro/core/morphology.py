@@ -2,82 +2,76 @@
 
 Public API of the paper's contribution: separable erosion/dilation plus the
 derived operators (opening, closing, gradient, top-hat, black-hat). Every
-2-D operator factors into two 1-D hybrid passes (core/dispatch.py), exactly
-the paper's §5 pipeline; a deliberately naive non-separable reference is kept
-for tests and for quantifying the separability win.
+function here is a thin wrapper over the morphology expression IR
+(``repro.morph``): it builds the operator's graph and lowers it through
+``lower_xla`` — two 1-D hybrid passes per primitive (core/dispatch.py),
+exactly the paper's §5 pipeline. The same graphs lower to the fused Pallas
+kernels (``repro.morph.lower_kernel``) and compile into serving plans
+(``repro.morph.to_plan``), so this module, ``kernels/ops.py`` and
+``serve/morph`` are one computation with three backends.
 
 Shapes: (..., H, W) — arbitrary leading batch dims. SE: (w_h, w_w), odd
 extents, anchor at center. Dtypes: u8/i8/i32/bf16/f32.
+
+.. deprecated:: the per-call ``method=`` kwarg
+    Fold it into the policy instead: ``DispatchPolicy(method="vhgw")``.
+    The kwarg keeps working as a shim (``DispatchPolicy.with_overrides``).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.dispatch import DispatchPolicy, Method, morph_1d
+from repro.core.dispatch import DispatchPolicy, Method
 from repro.core.types import MAX, MIN, Array, as_op, check_window
 
 
-def _separable(
-    x: Array,
-    se: tuple[int, int],
-    op,
-    method: Method = "auto",
-    policy: DispatchPolicy | None = None,
-) -> Array:
-    w_h, w_w = (check_window(w) for w in se)
-    op = as_op(op)
-    # Pass order: sublane (H) pass first, then lane (W) pass — both orders are
-    # mathematically identical (min/max commute); this order keeps the larger
-    # intermediate in the layout the W-pass wants.
-    y = morph_1d(x, w_h, axis=-2, op=op, method=method, policy=policy)
-    return morph_1d(y, w_w, axis=-1, op=op, method=method, policy=policy)
+def _lower(expr_builder, x: Array, method: Method, policy) -> Array:
+    """Build the operator graph and run it through the XLA lowering pass."""
+    from repro.morph.expr import X
+    from repro.morph.lower_xla import lower_xla
+
+    policy = (policy or DispatchPolicy.calibrated()).with_overrides(method=method)
+    return lower_xla(expr_builder(X), policy=policy)(x)
 
 
 def erode(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
     """Grayscale erosion by a flat w_h x w_w rectangle."""
-    return _separable(x, se, MIN, method, policy)
+    return _lower(lambda e: e.erode(se), x, method, policy)
 
 
 def dilate(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
     """Grayscale dilation by a flat w_h x w_w rectangle."""
-    return _separable(x, se, MAX, method, policy)
+    return _lower(lambda e: e.dilate(se), x, method, policy)
 
 
-def opening(x: Array, se=(3, 3), **kw) -> Array:
-    return dilate(erode(x, se, **kw), se, **kw)
+def opening(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
+    return _lower(lambda e: e.opening(se), x, method, policy)
 
 
-def closing(x: Array, se=(3, 3), **kw) -> Array:
-    return erode(dilate(x, se, **kw), se, **kw)
+def closing(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
+    return _lower(lambda e: e.closing(se), x, method, policy)
 
 
-def gradient(x: Array, se=(3, 3), **kw) -> Array:
-    """Morphological gradient; computed in a widened dtype for integers."""
-    d, e = dilate(x, se, **kw), erode(x, se, **kw)
-    if jnp.issubdtype(x.dtype, jnp.integer):
-        wide = jnp.promote_types(x.dtype, jnp.int32)
-        return (d.astype(wide) - e.astype(wide)).astype(jnp.int32)
-    return d - e
+def gradient(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
+    """Morphological gradient; integer inputs return the centralized widened
+    dtype (``core.types.widen_dtype`` — promote_types(dtype, int32)), the
+    same rule the kernel and serving paths share."""
+    return _lower(lambda e: e.gradient(se), x, method, policy)
 
 
-def tophat(x: Array, se=(3, 3), **kw) -> Array:
-    o = opening(x, se, **kw)
-    if jnp.issubdtype(x.dtype, jnp.integer):
-        return x.astype(jnp.int32) - o.astype(jnp.int32)
-    return x - o
+def tophat(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
+    return _lower(lambda e: e.tophat(se), x, method, policy)
 
 
-def blackhat(x: Array, se=(3, 3), **kw) -> Array:
-    c = closing(x, se, **kw)
-    if jnp.issubdtype(x.dtype, jnp.integer):
-        return c.astype(jnp.int32) - x.astype(jnp.int32)
-    return c - x
+def blackhat(x: Array, se=(3, 3), *, method: Method = "auto", policy=None) -> Array:
+    return _lower(lambda e: e.blackhat(se), x, method, policy)
 
 
 # ---------------------------------------------------------------------------
 # Naive non-separable reference (the paper's implicit baseline): a full
 # w_h*w_w-term reduction per pixel. Kept un-jitted-fast on purpose: tests and
 # benchmarks use it as ground truth and to measure the separability speedup.
+# Deliberately NOT expressed via the IR — it is the independent oracle.
 # ---------------------------------------------------------------------------
 
 

@@ -55,3 +55,24 @@ def check_window(w: int) -> int:
     if w < 1 or w % 2 == 0:
         raise ValueError(f"structuring-element extent must be odd and >= 1, got {w}")
     return w
+
+
+def widen_dtype(dtype) -> jnp.dtype:
+    """Dtype in which morphological differences are computed.
+
+    Integer images widen to ``promote_types(dtype, int32)`` (an i8/u8
+    difference overflows its own type); floats keep their dtype. This is the
+    single source of truth for the widening rule that used to be copied in
+    ``core.morphology.gradient``, ``kernels.ops.gradient2d_tpu`` and the
+    serving-plan gradient step.
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.promote_types(dtype, jnp.int32)
+    return dtype
+
+
+def widened_sub(a: Array, b: Array) -> Array:
+    """``a - b`` computed (and returned) in ``widen_dtype`` of the inputs."""
+    wide = widen_dtype(jnp.result_type(a, b))
+    return a.astype(wide) - b.astype(wide)

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import closing, gradient, maxpool2d, opening
+from repro.core import maxpool2d
+from repro.morph import Cast, X, lower_xla, op_expr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,13 +67,20 @@ CLEANUP_STEPS: tuple[tuple[str, tuple[int, int]], ...] = (
     ("gradient", (3, 3)),  # stroke edges (u8) -> "edges" output
 )
 
+# The same chain as one expression graph (repro.morph): the direct path
+# lowers it through XLA here, the serving plan compiles the identical graph.
+_CLEAN_EXPR = op_expr(
+    CLEANUP_STEPS[1][0], CLEANUP_STEPS[1][1],
+    op_expr(CLEANUP_STEPS[0][0], CLEANUP_STEPS[0][1], X),
+)
+_EDGES_EXPR = Cast(op_expr(CLEANUP_STEPS[2][0], CLEANUP_STEPS[2][1], _CLEAN_EXPR), "uint8")
+CLEANUP_EXPRS = (("clean", _CLEAN_EXPR), ("edges", _EDGES_EXPR))
+
 
 @jax.jit
 def _cleanup(img: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    x = opening(img, CLEANUP_STEPS[0][1])
-    x = closing(x, CLEANUP_STEPS[1][1])
-    edges = gradient(x, CLEANUP_STEPS[2][1]).astype(jnp.uint8)
-    return x, edges
+    outs = lower_xla(dict(CLEANUP_EXPRS))(img)
+    return outs["clean"], outs["edges"]
 
 
 def cleanup_batch(img: np.ndarray):

@@ -9,14 +9,22 @@
   §5.2 transpose trick (or an XLA transpose, selectable, for §Perf A/B).
 
 The 2-D operators (``erode2d_tpu`` / ``dilate2d_tpu`` / ``opening2d_tpu`` /
-``closing2d_tpu`` / ``gradient2d_tpu``) default to the *fused* megakernel
-(kernels/morph_fused.py): one ``pallas_call`` doing H pass -> in-VMEM
-transpose -> W pass -> store, one HBM read + write per operator, with a
-batch grid for (B, H, W) stacks. ``fused=False`` (or
-``DispatchPolicy(fused_2d=False)``) selects the legacy two-pass +
-double-transpose pipeline for A/B comparison; SEs whose W-wing exceeds the
-fused policy range (``morph_fused.fused_supports``) fall back to it
-automatically.
+``closing2d_tpu`` / ``gradient2d_tpu``) are thin wrappers over the
+morphology expression IR: each builds its graph (``repro.morph.expr``) and
+lowers it through ``repro.morph.lower_kernel``, whose primitives are
+``raw_morph2d`` / ``raw_gradient2d`` below — the fused megakernel
+(kernels/morph_fused.py, one ``pallas_call`` doing H pass -> in-VMEM
+transpose -> W pass) when the policy and SE allow, the legacy two-pass +
+double-transpose pipeline otherwise. The lowering recognizes the
+``Sub(Dilate, Erode)`` gradient pattern and emits the single-launch fused
+gradient kernel.
+
+.. deprecated:: the per-call ``fused=`` / ``method=`` / ``lane_strategy=``
+    kwargs. Every dispatch decision now lives on :class:`DispatchPolicy`
+    (``fused_2d`` / ``method`` / ``lane_strategy`` / ``interpret``); the
+    kwargs keep working as shims that fold into the policy
+    (``DispatchPolicy.with_overrides``) so A/B harnesses and old callers
+    don't break.
 
 All entry points accept ``interpret=``; the default ``None`` defers to the
 single resolver (``core.dispatch.resolve_interpret``): explicit argument >
@@ -27,19 +35,21 @@ interpreted Pallas.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import DispatchPolicy, resolve_interpret
-from repro.core.types import Array, as_op, check_window
+from repro.core.types import Array, as_op, check_window, widened_sub
 from repro.kernels.fused_gradient import gradient_linear_sublane
 from repro.kernels.morph_fused import fused_supports, gradient2d_fused, morph2d_fused
 from repro.kernels.morph_linear import morph_linear_sublane
 from repro.kernels.morph_vhgw import morph_vhgw_sublane
 from repro.kernels.transpose import transpose_tiled
+from repro.morph.expr import X
+from repro.morph.lower_kernel import lower_kernel
 
 LaneStrategy = Literal["transpose_kernel", "xla"]
 
@@ -47,6 +57,12 @@ LaneStrategy = Literal["transpose_kernel", "xla"]
 def _sublane_pass(x, w, op, method, policy: DispatchPolicy, interpret):
     if method == "auto":
         method = "linear" if w <= policy.w0_major else "vhgw"
+    elif method != "vhgw":
+        # linear_tree / linear_paired are jnp-only variants; the linear
+        # ladder kernel is their analog here (same family, same crossover
+        # side), so a forced linear-family method stays linear-family
+        # instead of silently flipping to vHGW.
+        method = "linear"
     fn = morph_linear_sublane if method == "linear" else morph_vhgw_sublane
     return fn(x, w=w, op=op, interpret=interpret)
 
@@ -58,7 +74,7 @@ def morph_1d_tpu(
     axis: int = -2,
     op: str = "min",
     method: str = "auto",
-    lane_strategy: LaneStrategy = "transpose_kernel",
+    lane_strategy: LaneStrategy | None = None,
     policy: DispatchPolicy | None = None,
     interpret: bool | None = None,
 ) -> Array:
@@ -67,6 +83,8 @@ def morph_1d_tpu(
     op = as_op(op).name
     policy = policy or DispatchPolicy.calibrated()
     interpret = resolve_interpret(interpret, policy)
+    if lane_strategy is None:
+        lane_strategy = policy.lane_strategy
     if x.ndim != 2:
         raise ValueError("morph_1d_tpu operates on (H, W); vmap for batches")
     axis = axis % 2
@@ -84,69 +102,130 @@ def morph_1d_tpu(
     return jnp.swapaxes(out, 0, 1)
 
 
-def _use_fused(se, fused: bool | None, policy: DispatchPolicy) -> bool:
-    if fused is None:
-        fused = policy.fused_2d
-    return fused and fused_supports(se)
-
-
-def _morph2d_two_pass(x, se, op, method, lane_strategy, policy, interpret):
+def _morph2d_two_pass(x, se, op, policy, interpret):
     if x.ndim == 3:  # the fused path's batch grid has no two-pass analog
         return jax.vmap(
-            lambda m: _morph2d_two_pass(
-                m, se, op, method, lane_strategy, policy, interpret
-            )
+            lambda m: _morph2d_two_pass(m, se, op, policy, interpret)
         )(x)
     w_h, w_w = se
     y = morph_1d_tpu(
-        x, w_h, axis=0, op=op, method=method,
-        lane_strategy=lane_strategy, policy=policy, interpret=interpret,
+        x, w_h, axis=0, op=op, method=policy.method,
+        lane_strategy=policy.lane_strategy, policy=policy, interpret=interpret,
     )
     return morph_1d_tpu(
-        y, w_w, axis=1, op=op, method=method,
-        lane_strategy=lane_strategy, policy=policy, interpret=interpret,
+        y, w_w, axis=1, op=op, method=policy.method,
+        lane_strategy=policy.lane_strategy, policy=policy, interpret=interpret,
     )
 
 
-def _morph2d(
+def _fused_method(policy: DispatchPolicy) -> str:
+    # the fused kernel knows only the linear/vhgw pair; forced linear-family
+    # variants (linear_tree/linear_paired) map to its linear ladder — the
+    # same coercion _sublane_pass applies, so both kernel paths honor the
+    # policy's family even when the exact jnp variant has no kernel analog
+    if policy.method in ("auto", "linear", "vhgw"):
+        return policy.method
+    return "linear"
+
+
+def raw_morph2d(
+    x: Array, se, op: str, *, policy: DispatchPolicy, interpret: bool | None = None
+) -> Array:
+    """Backend primitive for the kernel lowering: fused megakernel when the
+    policy and SE allow, two-pass + transpose pipeline otherwise."""
+    interpret = resolve_interpret(interpret, policy)
+    if policy.fused_2d and fused_supports(se) and x.ndim in (2, 3):
+        return morph2d_fused(
+            x, tuple(se), op=op, method=_fused_method(policy),
+            policy=policy, interpret=interpret,
+        )
+    return _morph2d_two_pass(x, se, op, policy, interpret)
+
+
+def raw_gradient2d(
+    x: Array, se, *, policy: DispatchPolicy, interpret: bool | None = None
+) -> Array:
+    """Backend primitive for the gradient pattern: the shared-strip fused
+    gradient kernel, or two-pass dilate/erode plus a widened subtraction."""
+    interpret = resolve_interpret(interpret, policy)
+    if policy.fused_2d and fused_supports(se) and x.ndim in (2, 3):
+        return gradient2d_fused(
+            x, tuple(se), method=_fused_method(policy),
+            policy=policy, interpret=interpret,
+        )
+    two = dataclasses.replace(policy, fused_2d=False)
+    d = raw_morph2d(x, se, "max", policy=two, interpret=interpret)
+    e = raw_morph2d(x, se, "min", policy=two, interpret=interpret)
+    return widened_sub(d, e)
+
+
+def _folded_policy(policy, fused, method, lane_strategy, interpret) -> DispatchPolicy:
+    policy = policy or DispatchPolicy.calibrated()
+    return policy.with_overrides(
+        fused=fused, method=method, lane_strategy=lane_strategy, interpret=interpret
+    )
+
+
+def _run2d(expr, x, policy, fused, method, lane_strategy, interpret) -> Array:
+    policy = _folded_policy(policy, fused, method, lane_strategy, interpret)
+    return lower_kernel(expr, policy=policy)(x)
+
+
+def erode2d_tpu(
     x: Array,
-    se,
-    op: str,
+    se=(3, 3),
     *,
     fused: bool | None = None,
     method: str = "auto",
-    lane_strategy: LaneStrategy = "transpose_kernel",
+    lane_strategy: LaneStrategy | None = None,
     policy: DispatchPolicy | None = None,
     interpret: bool | None = None,
 ) -> Array:
-    policy = policy or DispatchPolicy.calibrated()
-    interpret = resolve_interpret(interpret, policy)
-    if _use_fused(se, fused, policy) and x.ndim in (2, 3):
-        return morph2d_fused(
-            x, tuple(se), op=op, method=method if method in ("auto", "linear", "vhgw") else "auto",
-            policy=policy, interpret=interpret,
-        )
-    return _morph2d_two_pass(x, se, op, method, lane_strategy, policy, interpret)
+    """2-D erosion: ``lower_kernel(X.erode(se))`` — one fused
+    ``pallas_call`` by default (``fused=False`` selects two-pass for A/B)."""
+    return _run2d(X.erode(se), x, policy, fused, method, lane_strategy, interpret)
 
 
-def erode2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
-    """2-D erosion; one fused ``pallas_call`` by default (``fused=False`` A/B)."""
-    return _morph2d(x, se, "min", **kw)
+def dilate2d_tpu(
+    x: Array,
+    se=(3, 3),
+    *,
+    fused: bool | None = None,
+    method: str = "auto",
+    lane_strategy: LaneStrategy | None = None,
+    policy: DispatchPolicy | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """2-D dilation: ``lower_kernel(X.dilate(se))``."""
+    return _run2d(X.dilate(se), x, policy, fused, method, lane_strategy, interpret)
 
 
-def dilate2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
-    """2-D dilation; one fused ``pallas_call`` by default (``fused=False`` A/B)."""
-    return _morph2d(x, se, "max", **kw)
-
-
-def opening2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+def opening2d_tpu(
+    x: Array,
+    se=(3, 3),
+    *,
+    fused: bool | None = None,
+    method: str = "auto",
+    lane_strategy: LaneStrategy | None = None,
+    policy: DispatchPolicy | None = None,
+    interpret: bool | None = None,
+) -> Array:
     """Erode then dilate: two fused launches by default (was eight)."""
-    return dilate2d_tpu(erode2d_tpu(x, se, **kw), se, **kw)
+    return _run2d(X.opening(se), x, policy, fused, method, lane_strategy, interpret)
 
 
-def closing2d_tpu(x: Array, se=(3, 3), **kw) -> Array:
+def closing2d_tpu(
+    x: Array,
+    se=(3, 3),
+    *,
+    fused: bool | None = None,
+    method: str = "auto",
+    lane_strategy: LaneStrategy | None = None,
+    policy: DispatchPolicy | None = None,
+    interpret: bool | None = None,
+) -> Array:
     """Dilate then erode: two fused launches by default (was eight)."""
-    return erode2d_tpu(dilate2d_tpu(x, se, **kw), se, **kw)
+    return _run2d(X.closing(se), x, policy, fused, method, lane_strategy, interpret)
 
 
 def gradient2d_tpu(
@@ -155,33 +234,20 @@ def gradient2d_tpu(
     *,
     fused: bool | None = None,
     method: str = "auto",
-    lane_strategy: LaneStrategy = "transpose_kernel",
+    lane_strategy: LaneStrategy | None = None,
     policy: DispatchPolicy | None = None,
     interpret: bool | None = None,
 ) -> Array:
     """2-D morphological gradient (dilate - erode, widened for integers).
 
-    The default fused path shares the haloed strip load between the min and
-    max pipelines in a single ``pallas_call``; ``fused=False`` computes the
-    two-pass dilate/erode pair and subtracts.
+    ``X.gradient(se)`` is a ``Sub(Dilate, Erode)`` over a shared child; the
+    kernel lowering pattern-matches it into the fused gradient kernel (one
+    launch sharing the haloed strip between both pipelines) when the policy
+    allows, and otherwise into the two-pass pair plus a widened subtraction
+    — the same centralized rule (``core.types.widened_sub``) every gradient
+    path in the repo now shares.
     """
-    policy = policy or DispatchPolicy.calibrated()
-    interpret = resolve_interpret(interpret, policy)
-    if _use_fused(se, fused, policy) and x.ndim in (2, 3):
-        return gradient2d_fused(
-            x, tuple(se),
-            method=method if method in ("auto", "linear", "vhgw") else "auto",
-            policy=policy, interpret=interpret,
-        )
-    kw = dict(
-        fused=False, method=method, lane_strategy=lane_strategy,
-        policy=policy, interpret=interpret,
-    )
-    d = dilate2d_tpu(x, se, **kw)
-    e = erode2d_tpu(x, se, **kw)
-    if jnp.issubdtype(x.dtype, jnp.integer):
-        return d.astype(jnp.int32) - e.astype(jnp.int32)
-    return d - e
+    return _run2d(X.gradient(se), x, policy, fused, method, lane_strategy, interpret)
 
 
 def gradient_1d_tpu(

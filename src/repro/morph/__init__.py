@@ -1,0 +1,73 @@
+"""Unified morphology expression API — one graph IR from core ops to fused
+kernels and serving plans.
+
+Build an expression once, run it anywhere:
+
+    from repro.morph import X, lower_xla, lower_kernel, to_plan
+
+    expr = X.opening((3, 3)).closing((5, 5)).gradient((3, 3))
+    y = lower_xla(expr)(img)                   # pure-XLA separable passes
+    y = lower_kernel(expr)(img)                # fused Pallas megakernel
+    plan = to_plan(expr, name="edges")         # servable via MorphService
+
+``core.morphology``, ``core.derived``, the five 2-D kernel entry points and
+the serving plans are all thin wrappers over this package; ``analyze``
+derives halo and neutral-masking requirements from the graph.
+"""
+from repro.morph.analyze import free_vars, halo, masking_requirements, node_count
+from repro.morph.expr import (
+    BoundedIter,
+    Cast,
+    Clip,
+    Dilate,
+    Erode,
+    Max,
+    Mean,
+    Min,
+    MorphExpr,
+    StructuringElement,
+    Sub,
+    Var,
+    X,
+    geodesic_dilate_expr,
+    geodesic_erode_expr,
+    occo_expr,
+    reconstruct_by_dilation_expr,
+    reconstruct_by_erosion_expr,
+)
+from repro.morph.interp import evaluate, is_gradient
+from repro.morph.lower_kernel import lower_kernel
+from repro.morph.lower_xla import lower_xla
+from repro.morph.plan_compile import op_expr, steps_to_outputs, to_plan
+
+__all__ = [
+    "BoundedIter",
+    "Cast",
+    "Clip",
+    "Dilate",
+    "Erode",
+    "Max",
+    "Mean",
+    "Min",
+    "MorphExpr",
+    "StructuringElement",
+    "Sub",
+    "Var",
+    "X",
+    "geodesic_dilate_expr",
+    "geodesic_erode_expr",
+    "occo_expr",
+    "reconstruct_by_dilation_expr",
+    "reconstruct_by_erosion_expr",
+    "free_vars",
+    "halo",
+    "masking_requirements",
+    "node_count",
+    "evaluate",
+    "is_gradient",
+    "lower_kernel",
+    "lower_xla",
+    "op_expr",
+    "steps_to_outputs",
+    "to_plan",
+]

@@ -1,0 +1,161 @@
+"""Graph analyses over the morphology IR.
+
+These traversals replace hand-maintained per-op tables on the serving side:
+
+* :func:`halo` — the per-axis contamination radius of an expression,
+  derived structurally (each sequential Erode/Dilate adds its SE wings;
+  parallel branches take the max; bounded iteration multiplies the body's
+  per-iteration growth). The old serving rule ("opening/closing count
+  twice, gradient once") falls out as a theorem instead of a table.
+* :func:`masking_requirements` — which neutral element each primitive pass
+  needs on out-of-image data, in evaluation order. A composed graph can
+  need *both* neutrals at the same depth (gradient); deriving this from the
+  graph is what removed the executor's special-cased dual-neutral step.
+* :func:`free_vars` / :func:`node_count` — inputs and (deduplicated)
+  graph size.
+"""
+from __future__ import annotations
+
+from repro.morph.expr import (
+    BoundedIter,
+    Cast,
+    Clip,
+    Dilate,
+    Erode,
+    Max,
+    Mean,
+    Min,
+    MorphExpr,
+    Sub,
+    Var,
+)
+
+_BINARY = (Sub, Min, Max, Mean)
+_UNARY = (Clip, Cast)
+_PRIMS = (Erode, Dilate)
+
+
+def halo(expr: MorphExpr) -> tuple[int, int]:
+    """Per-axis radius outside a region that can influence its values.
+
+    ``Var`` leaves are 0; Erode/Dilate add their wings to the child's halo
+    (sequential contamination marches one wing per pass); elementwise
+    combinators run their branches in parallel, so the max dominates;
+    ``BoundedIter`` contributes ``halo(init) + iters * halo(body)`` — the
+    body's growth accrues once per iteration, and any direct reference to an
+    outer variable inside the body is covered by the same bound.
+    """
+    memo: dict[int, tuple[int, int]] = {}
+
+    def go(e: MorphExpr) -> tuple[int, int]:
+        key = id(e)
+        if key in memo:
+            return memo[key]
+        if isinstance(e, Var):
+            out = (0, 0)
+        elif isinstance(e, _PRIMS):
+            ch, cw = go(e.child)
+            wh, ww = e.se.wings
+            out = (ch + wh, cw + ww)
+        elif isinstance(e, _BINARY):
+            ah, aw = go(e.a)
+            bh, bw = go(e.b)
+            out = (max(ah, bh), max(aw, bw))
+        elif isinstance(e, _UNARY):
+            out = go(e.child)
+        elif isinstance(e, BoundedIter):
+            ih, iw = go(e.init)
+            bh, bw = go(e.body)
+            # until_stable seeds the loop state with one body application
+            # before the bounded loop runs, so it can apply iters + 1 total.
+            n = e.iters + 1 if e.until_stable else e.iters
+            out = (ih + n * bh, iw + n * bw)
+        else:
+            raise TypeError(f"unknown expression node {type(e).__name__}")
+        memo[key] = out
+        return out
+
+    return go(expr)
+
+
+def masking_requirements(expr: MorphExpr) -> tuple[tuple[str, tuple[int, int]], ...]:
+    """``(op_name, se)`` per primitive pass, in evaluation order.
+
+    ``op_name`` is ``"min"`` (erosion: out-of-image data must read as the
+    dtype max / +inf) or ``"max"`` (dilation: dtype min / -inf). Serving
+    executors mask the pad region with exactly these neutrals before each
+    pass; ``BoundedIter`` bodies repeat per iteration (reported once).
+    """
+    seen: set[int] = set()
+    out: list[tuple[str, tuple[int, int]]] = []
+
+    def go(e: MorphExpr) -> None:
+        if id(e) in seen:
+            return
+        seen.add(id(e))
+        if isinstance(e, Var):
+            return
+        if isinstance(e, _PRIMS):
+            go(e.child)
+            out.append(("min" if isinstance(e, Erode) else "max", e.se.pair))
+        elif isinstance(e, _BINARY):
+            go(e.a)
+            go(e.b)
+        elif isinstance(e, _UNARY):
+            go(e.child)
+        elif isinstance(e, BoundedIter):
+            go(e.init)
+            go(e.body)
+        else:
+            raise TypeError(f"unknown expression node {type(e).__name__}")
+
+    go(expr)
+    return tuple(out)
+
+
+def free_vars(expr: MorphExpr) -> frozenset[str]:
+    """Input names the expression reads (loop-state vars are bound)."""
+    seen: set[tuple[int, frozenset[str]]] = set()
+    names: set[str] = set()
+
+    def go(e: MorphExpr, bound: frozenset[str]) -> None:
+        if (id(e), bound) in seen:
+            return
+        seen.add((id(e), bound))
+        if isinstance(e, Var):
+            if e.name not in bound:
+                names.add(e.name)
+        elif isinstance(e, _PRIMS + _UNARY):
+            go(e.child, bound)
+        elif isinstance(e, _BINARY):
+            go(e.a, bound)
+            go(e.b, bound)
+        elif isinstance(e, BoundedIter):
+            go(e.init, bound)
+            go(e.body, bound | {e.var})
+        else:
+            raise TypeError(f"unknown expression node {type(e).__name__}")
+
+    go(expr, frozenset())
+    return frozenset(names)
+
+
+def node_count(expr: MorphExpr) -> int:
+    """Number of distinct nodes (shared subgraphs counted once)."""
+    seen: set[int] = set()
+
+    def go(e: MorphExpr) -> None:
+        if id(e) in seen:
+            return
+        seen.add(id(e))
+        if isinstance(e, _PRIMS + _UNARY):
+            go(e.child)
+        elif isinstance(e, _BINARY):
+            go(e.a)
+            go(e.b)
+        elif isinstance(e, BoundedIter):
+            go(e.init)
+            go(e.body)
+
+    go(expr)
+    return len(seen)

@@ -1,0 +1,275 @@
+"""Morphology expression IR: the paper's §2 algebra as a small graph.
+
+The paper builds every operator from two primitives — erosion and dilation —
+plus arithmetic ("other morphological operations ... can be expressed via
+erosion, dilation and arithmetical operations"). This module makes that
+algebra a first-class, hashable value:
+
+* :class:`StructuringElement` — a flat rectangular SE with odd extents;
+* primitive nodes :class:`Erode` / :class:`Dilate`;
+* arithmetic combinators :class:`Sub` (integer widening centralized in
+  ``core.types.widened_sub``), :class:`Min`, :class:`Max`, :class:`Clip`,
+  :class:`Mean` (integer-safe midpoint), :class:`Cast`;
+* :class:`BoundedIter` — bounded (optionally until-stable) iteration for
+  geodesic / reconstruction chains, the node that makes iterative operators
+  servable;
+* :class:`Var` leaves, so multi-input operators (marker/mask) are
+  expressible; the canonical single input is :data:`X` (``Var("x")``).
+
+Every node is a frozen dataclass: expressions compare structurally, hash
+stably within a process, and can key executable caches. Lowering lives in
+``lower_xla`` / ``lower_kernel``; serving compilation in ``plan_compile``;
+graph analyses (halo, free vars, masking requirements) in ``analyze``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.types import check_window
+
+
+@dataclasses.dataclass(frozen=True)
+class StructuringElement:
+    """A flat w_h x w_w rectangle, odd extents, anchor at center."""
+
+    h: int
+    w: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "h", check_window(self.h))
+        object.__setattr__(self, "w", check_window(self.w))
+
+    @classmethod
+    def of(cls, se) -> "StructuringElement":
+        """Coerce ``(h, w)`` tuples, bare ints (square SE) or SEs."""
+        if isinstance(se, StructuringElement):
+            return se
+        if isinstance(se, int):
+            return cls(se, se)
+        h, w = se
+        return cls(int(h), int(w))
+
+    @property
+    def pair(self) -> tuple[int, int]:
+        return (self.h, self.w)
+
+    @property
+    def wings(self) -> tuple[int, int]:
+        return ((self.h - 1) // 2, (self.w - 1) // 2)
+
+
+class MorphExpr:
+    """Base class for expression nodes; carries the fluent builder API."""
+
+    # -------------------------------------------------------- primitives
+    def erode(self, se=(3, 3)) -> "Erode":
+        return Erode(self, StructuringElement.of(se))
+
+    def dilate(self, se=(3, 3)) -> "Dilate":
+        return Dilate(self, StructuringElement.of(se))
+
+    # ------------------------------------------------- derived operators
+    def opening(self, se=(3, 3)) -> "MorphExpr":
+        return self.erode(se).dilate(se)
+
+    def closing(self, se=(3, 3)) -> "MorphExpr":
+        return self.dilate(se).erode(se)
+
+    def gradient(self, se=(3, 3)) -> "Sub":
+        """Dilate - erode over a *shared* child: lowering recognizes this
+        shape and can emit the fused gradient kernel."""
+        return Sub(self.dilate(se), self.erode(se))
+
+    def tophat(self, se=(3, 3)) -> "Sub":
+        return Sub(self, self.opening(se))
+
+    def blackhat(self, se=(3, 3)) -> "Sub":
+        return Sub(self.closing(se), self)
+
+    # ------------------------------------------------------- arithmetic
+    def __sub__(self, other: "MorphExpr") -> "Sub":
+        return Sub(self, other)
+
+    def minimum(self, other: "MorphExpr") -> "Min":
+        return Min(self, other)
+
+    def maximum(self, other: "MorphExpr") -> "Max":
+        return Max(self, other)
+
+    def clip(self, lo=None, hi=None) -> "Clip":
+        return Clip(self, lo, hi)
+
+    def astype(self, dtype) -> "Cast":
+        return Cast(self, dtype)
+
+
+def _check_expr(e, what: str) -> None:
+    if not isinstance(e, MorphExpr):
+        raise TypeError(f"{what} must be a MorphExpr, got {type(e).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Var(MorphExpr):
+    """An expression input. Single-input operators use ``X = Var('x')``."""
+
+    name: str = "x"
+
+
+@dataclasses.dataclass(frozen=True)
+class Erode(MorphExpr):
+    child: MorphExpr
+    se: StructuringElement
+
+    def __post_init__(self):
+        _check_expr(self.child, "Erode.child")
+        object.__setattr__(self, "se", StructuringElement.of(self.se))
+
+
+@dataclasses.dataclass(frozen=True)
+class Dilate(MorphExpr):
+    child: MorphExpr
+    se: StructuringElement
+
+    def __post_init__(self):
+        _check_expr(self.child, "Dilate.child")
+        object.__setattr__(self, "se", StructuringElement.of(self.se))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sub(MorphExpr):
+    """``a - b`` in the centralized widened dtype (core.types.widened_sub)."""
+
+    a: MorphExpr
+    b: MorphExpr
+
+    def __post_init__(self):
+        _check_expr(self.a, "Sub.a")
+        _check_expr(self.b, "Sub.b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Min(MorphExpr):
+    a: MorphExpr
+    b: MorphExpr
+
+    def __post_init__(self):
+        _check_expr(self.a, "Min.a")
+        _check_expr(self.b, "Min.b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Max(MorphExpr):
+    a: MorphExpr
+    b: MorphExpr
+
+    def __post_init__(self):
+        _check_expr(self.a, "Max.a")
+        _check_expr(self.b, "Max.b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Mean(MorphExpr):
+    """Integer-safe midpoint ``(a + b) // 2`` (the OCCO combiner); computed
+    widened, returned in the inputs' common dtype."""
+
+    a: MorphExpr
+    b: MorphExpr
+
+    def __post_init__(self):
+        _check_expr(self.a, "Mean.a")
+        _check_expr(self.b, "Mean.b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Clip(MorphExpr):
+    child: MorphExpr
+    lo: float | int | None = None
+    hi: float | int | None = None
+
+    def __post_init__(self):
+        _check_expr(self.child, "Clip.child")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cast(MorphExpr):
+    child: MorphExpr
+    dtype: str = "uint8"
+
+    def __post_init__(self):
+        _check_expr(self.child, "Cast.child")
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+
+
+_STATE = "__iter__"
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundedIter(MorphExpr):
+    """Apply ``body`` to ``init`` at most ``iters`` times.
+
+    ``body`` references the loop-carried value as ``Var(var)``; any other
+    free variables resolve against the enclosing environment, so geodesic
+    chains keep their mask as a plain input. ``until_stable=True`` adds the
+    classic convergence early-exit (a ``while_loop`` still bounded by
+    ``iters`` — the form core/derived.py reconstruction uses);
+    ``until_stable=False`` lowers to a fixed ``fori_loop``, the
+    fixed-trace shape the serving engine wants.
+    """
+
+    init: MorphExpr
+    body: MorphExpr
+    iters: int
+    var: str = _STATE
+    until_stable: bool = True
+
+    def __post_init__(self):
+        _check_expr(self.init, "BoundedIter.init")
+        _check_expr(self.body, "BoundedIter.body")
+        if int(self.iters) < 1:
+            raise ValueError(f"BoundedIter.iters must be >= 1, got {self.iters}")
+        object.__setattr__(self, "iters", int(self.iters))
+
+
+X = Var("x")
+
+
+# ----------------------------------------------------------------- combinators
+def geodesic_dilate_expr(marker: MorphExpr, mask: MorphExpr, se=(3, 3)) -> MorphExpr:
+    """One geodesic step: dilate the marker, clamp under the mask."""
+    return Min(Dilate(marker, StructuringElement.of(se)), mask)
+
+
+def geodesic_erode_expr(marker: MorphExpr, mask: MorphExpr, se=(3, 3)) -> MorphExpr:
+    return Max(Erode(marker, StructuringElement.of(se)), mask)
+
+
+def reconstruct_by_dilation_expr(
+    marker: MorphExpr, mask: MorphExpr, se=(3, 3), *,
+    iters: int = 256, until_stable: bool = True,
+) -> BoundedIter:
+    """Morphological reconstruction by dilation as a bounded-iteration graph."""
+    return BoundedIter(
+        init=Min(marker, mask),
+        body=geodesic_dilate_expr(Var(_STATE), mask, se),
+        iters=iters,
+        until_stable=until_stable,
+    )
+
+
+def reconstruct_by_erosion_expr(
+    marker: MorphExpr, mask: MorphExpr, se=(3, 3), *,
+    iters: int = 256, until_stable: bool = True,
+) -> BoundedIter:
+    return BoundedIter(
+        init=Max(marker, mask),
+        body=geodesic_erode_expr(Var(_STATE), mask, se),
+        iters=iters,
+        until_stable=until_stable,
+    )
+
+
+def occo_expr(x: MorphExpr, se=(3, 3)) -> MorphExpr:
+    """OCCO smoothing: midpoint of open-close and close-open."""
+    return Mean(x.opening(se).closing(se), x.closing(se).opening(se))

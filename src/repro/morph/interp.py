@@ -1,0 +1,176 @@
+"""Shared evaluator for the morphology IR.
+
+``evaluate`` walks an expression once (shared subgraphs memoized, so
+``gradient``'s common child is computed a single time) and is parameterized
+by three hooks that the lowering passes and the serving executor inject:
+
+* ``prim(op, x, se)`` — how Erode/Dilate run (separable jnp passes for
+  ``lower_xla``, the fused Pallas megakernel for ``lower_kernel``, masked
+  variants for serving). ``op`` is a ``core.types.MorphOp``.
+* ``pre_prim(x, op)`` — optional transform of every primitive's input; the
+  serving executor uses it to overwrite out-of-rect data with the op's own
+  neutral element. Because it runs per *node*, a graph that needs both
+  neutrals on one value (gradient) just works — no special cases.
+* ``gradient_prim(x, se)`` — optional pattern hook: ``Sub(Dilate(c, se),
+  Erode(c, se))`` with a shared child is recognized and handed here, which
+  is how ``lower_kernel`` emits the single-launch fused gradient kernel.
+  Unused when masking is active (the two branches need different neutrals
+  on the same input, so they cannot share one kernel input).
+
+Arithmetic nodes centralize the integer-widening rule via
+``core.types.widened_sub`` — the one copy the whole repo now shares.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import MAX, MIN, widen_dtype, widened_sub
+from repro.morph.expr import (
+    BoundedIter,
+    Cast,
+    Clip,
+    Dilate,
+    Erode,
+    Max,
+    Mean,
+    Min,
+    MorphExpr,
+    Sub,
+    Var,
+)
+
+
+def is_gradient(node: MorphExpr) -> bool:
+    """``Sub(Dilate(c, se), Erode(c, se))`` over a shared child and SE."""
+    return (
+        isinstance(node, Sub)
+        and isinstance(node.a, Dilate)
+        and isinstance(node.b, Erode)
+        and node.a.se == node.b.se
+        and node.a.child == node.b.child
+    )
+
+
+def evaluate(
+    expr: MorphExpr,
+    env: dict,
+    *,
+    prim,
+    pre_prim=None,
+    gradient_prim=None,
+    memo: dict | None = None,
+):
+    """Evaluate ``expr`` with inputs ``env`` (name -> array).
+
+    Pass the same ``memo`` dict across several ``evaluate`` calls to share
+    work between a plan's named outputs (later outputs typically extend the
+    chain that produced earlier ones).
+    """
+    memo = {} if memo is None else memo
+
+    def ev(node: MorphExpr):
+        key = id(node)
+        if key not in memo:
+            memo[key] = _eval(node)
+        return memo[key]
+
+    def run_prim(op, node):
+        x = ev(node.child)
+        if pre_prim is not None:
+            x = pre_prim(x, op)
+        return prim(op, x, node.se.pair)
+
+    def _eval(node: MorphExpr):
+        if isinstance(node, Var):
+            try:
+                return env[node.name]
+            except KeyError:
+                raise KeyError(
+                    f"expression input {node.name!r} not provided; "
+                    f"have {sorted(env)}"
+                ) from None
+        if isinstance(node, Erode):
+            return run_prim(MIN, node)
+        if isinstance(node, Dilate):
+            return run_prim(MAX, node)
+        if isinstance(node, Sub):
+            if gradient_prim is not None and pre_prim is None and is_gradient(node):
+                return gradient_prim(ev(node.a.child), node.a.se.pair)
+            return widened_sub(ev(node.a), ev(node.b))
+        if isinstance(node, Min):
+            return jnp.minimum(ev(node.a), ev(node.b))
+        if isinstance(node, Max):
+            return jnp.maximum(ev(node.a), ev(node.b))
+        if isinstance(node, Mean):
+            a, b = ev(node.a), ev(node.b)
+            out_dt = jnp.result_type(a, b)
+            if jnp.issubdtype(out_dt, jnp.integer):
+                wide = widen_dtype(out_dt)
+                return ((a.astype(wide) + b.astype(wide)) // 2).astype(out_dt)
+            return ((a + b) / 2).astype(out_dt)
+        if isinstance(node, Clip):
+            return jnp.clip(ev(node.child), node.lo, node.hi)
+        if isinstance(node, Cast):
+            return ev(node.child).astype(node.dtype)
+        if isinstance(node, BoundedIter):
+            return _bounded_iter(node)
+        raise TypeError(f"unknown expression node {type(node).__name__}")
+
+    def _bounded_iter(node: BoundedIter):
+        init = ev(node.init)
+
+        def step(cur):
+            sub_env = dict(env)
+            sub_env[node.var] = cur
+            # fresh memo: the loop body re-traces per lax iteration variable
+            return evaluate(
+                node.body, sub_env,
+                prim=prim, pre_prim=pre_prim, gradient_prim=gradient_prim,
+            )
+
+        if not node.until_stable:
+            return jax.lax.fori_loop(0, node.iters, lambda _, cur: step(cur), init)
+
+        # until-stable: the exact loop shape core/derived.py reconstruction
+        # has always used, so IR-lowered reconstruction is bit-identical.
+        def cond(state):
+            prev, cur, i = state
+            return jnp.logical_and(i < node.iters, jnp.any(prev != cur))
+
+        def body(state):
+            _, cur, i = state
+            return cur, step(cur), i + 1
+
+        _, out, _ = jax.lax.while_loop(cond, body, (init, step(init), jnp.int32(0)))
+        return out
+
+    return ev(expr)
+
+
+def make_lowering(outputs, *, prim, pre_prim=None, gradient_prim=None):
+    """Shared entry-point plumbing for the lowering passes.
+
+    ``outputs`` is a single expression or a ``{name: expr}`` mapping; the
+    returned ``fn(x=None, **vars)`` evaluates all outputs over one shared
+    memo (named outputs typically extend each other's chains) and unwraps
+    the single-expression case to a bare array.
+    """
+    single = isinstance(outputs, MorphExpr)
+    outs = {"out": outputs} if single else dict(outputs)
+
+    def fn(x=None, **env):
+        if x is not None:
+            env.setdefault("x", x)
+        memo: dict = {}
+        res = {
+            k: evaluate(
+                e, env,
+                prim=prim, pre_prim=pre_prim, gradient_prim=gradient_prim,
+                memo=memo,
+            )
+            for k, e in outs.items()
+        }
+        return res["out"] if single else res
+
+    return fn

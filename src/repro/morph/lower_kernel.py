@@ -1,0 +1,37 @@
+"""Lower a morphology expression to the fused Pallas TPU kernels.
+
+Erode/Dilate nodes dispatch through ``kernels.ops.raw_morph2d`` (the fused
+single-``pallas_call`` megakernel when the policy and SE allow, the legacy
+two-pass + transpose pipeline otherwise — all governed by
+:class:`DispatchPolicy`), and the evaluator's pattern hook rewrites
+``Sub(Dilate(c, se), Erode(c, se))`` into the single-launch fused gradient
+kernel, so ``X.gradient(se)`` costs 2 reads + 1 write instead of two full
+operators plus a subtraction.
+
+Kernel modules are imported lazily inside the primitives: ``kernels.ops``
+itself builds its public entry points on this pass, and the morph package
+must stay importable without dragging the kernel stack in first.
+"""
+from __future__ import annotations
+
+from repro.core.dispatch import DispatchPolicy
+from repro.morph.interp import make_lowering
+
+
+def lower_kernel(
+    outputs, *, policy: DispatchPolicy | None = None, interpret: bool | None = None
+):
+    """``expr | {name: expr}`` -> ``fn(x=None, **vars) -> array | {name: array}``."""
+    policy = policy or DispatchPolicy.calibrated()
+
+    def prim(op, x, se):
+        from repro.kernels.ops import raw_morph2d
+
+        return raw_morph2d(x, se, op.name, policy=policy, interpret=interpret)
+
+    def gradient_prim(x, se):
+        from repro.kernels.ops import raw_gradient2d
+
+        return raw_gradient2d(x, se, policy=policy, interpret=interpret)
+
+    return make_lowering(outputs, prim=prim, gradient_prim=gradient_prim)

@@ -1,0 +1,27 @@
+"""Lower a morphology expression to pure-XLA separable passes.
+
+Every Erode/Dilate node becomes the paper's two 1-D hybrid passes
+(``core.dispatch.morph_1d`` — sublane axis first, then lane axis), so an
+IR-lowered operator is the *same computation* as the legacy
+``core.morphology`` functions, which are now thin wrappers over this pass.
+
+``lower_xla`` accepts a single expression or a ``{name: expr}`` mapping
+(named outputs share one memoized walk) and returns a plain function —
+callers jit. Works for any ``(..., H, W)`` leading-batch layout, exactly
+like the jnp primitives underneath.
+"""
+from __future__ import annotations
+
+from repro.core.dispatch import DispatchPolicy, morph_1d
+from repro.morph.interp import make_lowering
+
+
+def lower_xla(outputs, *, policy: DispatchPolicy | None = None):
+    """``expr | {name: expr}`` -> ``fn(x=None, **vars) -> array | {name: array}``."""
+    policy = policy or DispatchPolicy.calibrated()
+
+    def prim(op, x, se):
+        y = morph_1d(x, se[0], axis=-2, op=op, policy=policy)
+        return morph_1d(y, se[1], axis=-1, op=op, policy=policy)
+
+    return make_lowering(outputs, prim=prim)

@@ -1,0 +1,111 @@
+"""Compile morphology expressions into serving plans.
+
+The serving engine's unit of work is a :class:`repro.serve.morph.plans.Plan`
+— named output expressions over the single input ``Var("x")``, with halo and
+per-stage masking derived by graph traversal (``analyze``). This module owns
+the two construction paths:
+
+* :func:`to_plan` — any expression (or ``{name: expr}`` mapping) becomes a
+  plan; this is how iterative operators (``reconstruct_by_dilation_expr``
+  with bounded iterations, OCCO) reach :class:`MorphService`.
+* :func:`steps_to_outputs` — the legacy ``Step`` chain (string op + SE +
+  optional save/cast) re-expressed as IR outputs, so existing plans keep
+  their exact semantics (the running value feeds the next step *un-cast*;
+  ``astype`` applies only to the saved output).
+
+The plan dataclass itself stays in ``serve/morph/plans.py`` (the IR layer
+does not import the serving stack); ``to_plan`` imports it lazily.
+"""
+from __future__ import annotations
+
+from repro.morph.analyze import free_vars
+from repro.morph.expr import Cast, MorphExpr, StructuringElement, X
+
+_OP_BUILDERS = {
+    "erode": lambda c, se: c.erode(se),
+    "dilate": lambda c, se: c.dilate(se),
+    "opening": lambda c, se: c.opening(se),
+    "closing": lambda c, se: c.closing(se),
+    "gradient": lambda c, se: c.gradient(se),
+    "tophat": lambda c, se: c.tophat(se),
+    "blackhat": lambda c, se: c.blackhat(se),
+}
+
+
+def op_expr(op: str, se, child: MorphExpr = X) -> MorphExpr:
+    """Named-operator shorthand -> IR (the string surface of plans/steps)."""
+    try:
+        builder = _OP_BUILDERS[op]
+    except KeyError:
+        raise ValueError(
+            f"unknown morphology op {op!r}; expected one of {sorted(_OP_BUILDERS)}"
+        ) from None
+    return builder(child, StructuringElement.of(se))
+
+
+def steps_to_outputs(steps) -> tuple[tuple[str, MorphExpr], ...]:
+    """Legacy Step chain -> ordered ``(name, expr)`` outputs.
+
+    Mirrors the historical executor: each step transforms the running value;
+    ``save_as`` tags an output (``astype`` casting only the saved copy); a
+    plan with no tagged outputs returns its final value as ``"out"``.
+    """
+    cur: MorphExpr = X
+    outs: list[tuple[str, MorphExpr]] = []
+    for s in steps:
+        cur = op_expr(s.op, s.se, cur)
+        if s.save_as:
+            outs.append((s.save_as, Cast(cur, s.astype) if s.astype else cur))
+    if not outs:
+        outs.append(("out", cur))
+    return tuple(outs)
+
+
+def _normalize_outputs(outputs) -> tuple[tuple[str, MorphExpr], ...]:
+    if isinstance(outputs, MorphExpr):
+        items: tuple = (("out", outputs),)
+    else:
+        items = tuple(dict(outputs).items())
+    if not items:
+        raise ValueError("a plan needs at least one output expression")
+    for name, e in items:
+        if not isinstance(e, MorphExpr):
+            raise TypeError(f"output {name!r} is not a MorphExpr")
+        extra = free_vars(e) - {"x"}
+        if extra:
+            raise ValueError(
+                f"servable expressions take the single input Var('x'); output "
+                f"{name!r} also reads {sorted(extra)}"
+            )
+    return items
+
+
+def to_plan(outputs, name: str | None = None):
+    """Compile ``expr | {name: expr}`` into a serving ``Plan``.
+
+    Outputs must be closed over the single input ``Var('x')`` (that is what
+    the service feeds); halo and masking needs come from graph traversal,
+    so any composition — including ``BoundedIter`` chains — is servable
+    without per-op tables.
+    """
+    from repro.serve.morph.plans import Plan
+
+    items = _normalize_outputs(outputs)
+    if name is None:
+        name = f"expr_{abs(hash(items)) % 16**10:010x}"
+    return Plan(name, steps=(), outputs=items)
+
+
+def is_gradient_expr(e: MorphExpr) -> bool:
+    """Re-export of the evaluator's gradient pattern (for introspection)."""
+    from repro.morph.interp import is_gradient
+
+    return is_gradient(e)
+
+
+__all__ = [
+    "op_expr",
+    "steps_to_outputs",
+    "to_plan",
+    "is_gradient_expr",
+]

@@ -14,13 +14,17 @@ from repro.serve.morph.buckets import (
 )
 from repro.serve.morph.plans import (
     PLANS,
+    Backend,
     Plan,
     Step,
+    VALID_BACKENDS,
     build_executor,
+    check_backend,
     document_cleanup_plan,
     get_plan,
     register_plan,
     single_op_plan,
+    to_plan,
 )
 from repro.serve.morph.service import (
     ExecutableCache,
@@ -38,9 +42,13 @@ __all__ = [
     "pad_to_bucket",
     "valid_rect",
     "PLANS",
+    "Backend",
+    "VALID_BACKENDS",
     "Plan",
     "Step",
     "build_executor",
+    "check_backend",
+    "to_plan",
     "document_cleanup_plan",
     "get_plan",
     "register_plan",

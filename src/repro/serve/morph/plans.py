@@ -1,28 +1,34 @@
-"""Morphology plans: named multi-op chains compiled as one executable.
+"""Morphology plans: named expression outputs compiled as one executable.
 
-A :class:`Plan` is the serving-side unit of work — a tuple of
-:class:`Step`s (``erode``/``dilate``/``opening``/``closing``/``gradient``,
-each with its own SE), with optional named outputs. The raw pipeline
-``data/images.py::cleanup_batch`` is ported here as the ``document_cleanup``
-plan (built from the same ``CLEANUP_STEPS`` constant), so the service and
-the direct path are verifiably the same computation.
+A :class:`Plan` is the serving-side unit of work: ordered named outputs,
+each a morphology expression (``repro.morph``) over the single input
+``Var("x")``. Plans come from two surfaces:
 
-**Valid-rect masking.** Executors take ``(x, rect)`` where ``x`` is a
-``(B, H, W)`` bucket (or halo-extended tile) stack and ``rect`` a ``(B, 4)``
-``[y0, y1, x0, x1)`` per-image valid rectangle. Before *every* primitive
-pass, everything outside the rect is overwritten with that op's neutral
-element (max for erosion, min for dilation — ``core.types.MorphOp.neutral``).
-That makes the pad region indistinguishable from the kernels' own virtual
-neutral border at every stage of a composed plan, which is what buys:
+* the legacy :class:`Step` chain (string op + SE + optional save/cast) —
+  kept as a deprecation shim; ``__post_init__`` re-expresses the steps as
+  IR outputs via ``repro.morph.steps_to_outputs``;
+* :func:`repro.morph.to_plan` — any expression, including ``BoundedIter``
+  reconstruction chains, becomes servable.
+
+``Plan.halo()`` and the per-stage neutral masking are *derived from the
+graph* (``repro.morph.analyze``): no per-op multiplier table, no
+special-cased gradient. The executor masks everything outside each image's
+valid rect with the op's own neutral element before every primitive pass
+(``core.types.MorphOp.neutral``), which makes the pad region
+indistinguishable from the kernels' virtual neutral border at every stage
+of a composed plan. That buys:
 
 * bucket padding that is bit-exact after cropping, with an arbitrary fill
   value (a single fill could never serve both min and max stages);
 * halo-correct tiling (tiling.py), where edge tiles mask the out-of-image
   part of their halo the same way.
 
-The ``gradient`` step needs *both* neutrals on the same input, so it is
-executed as dilate(mask_min(x)) - erode(mask_max(x)) with the same integer
-widening as ``core.morphology.gradient`` / ``gradient2d_tpu``.
+A graph that needs *both* neutrals on one value — ``gradient`` is
+``Sub(Dilate(c), Erode(c))`` — just works: each primitive node masks its own
+input. The raw pipeline ``data/images.py::cleanup_batch`` is ported here as
+the ``document_cleanup`` plan (built from the same ``CLEANUP_STEPS``
+constant), so the service and the direct path are verifiably the same
+computation.
 
 Executors are plain jitted functions; the per-key cache with hit/miss
 counters lives in service.py.
@@ -30,6 +36,7 @@ counters lives in service.py.
 from __future__ import annotations
 
 import dataclasses
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -37,17 +44,35 @@ import jax.numpy as jnp
 from repro.core import erode as core_erode
 from repro.core import dilate as core_dilate
 from repro.core.dispatch import DispatchPolicy, resolve_interpret
-from repro.core.types import MAX, MIN, check_window
+from repro.core.types import check_window
 from repro.data.images import CLEANUP_STEPS
 from repro.kernels import dilate2d_tpu, erode2d_tpu
+from repro.morph.analyze import halo as expr_halo
+from repro.morph.expr import MorphExpr
+from repro.morph.interp import evaluate
+from repro.morph.plan_compile import steps_to_outputs, to_plan
 
 _OPS = ("erode", "dilate", "opening", "closing", "gradient")
-Backend = str  # "jnp" (pure-XLA separable passes) | "kernel" (fused Pallas)
+
+Backend = Literal["jnp", "kernel"]
+VALID_BACKENDS = ("jnp", "kernel")
+
+
+def check_backend(backend: str) -> Backend:
+    """Validate a backend name loudly (a typo must not fall through to some
+    default path at execution time)."""
+    if backend not in VALID_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {VALID_BACKENDS}, got {backend!r}"
+        )
+    return backend
 
 
 @dataclasses.dataclass(frozen=True)
 class Step:
-    """One plan stage: a morphology op, its SE, and optional output tagging."""
+    """One legacy plan stage: a morphology op, its SE, and optional output
+    tagging. Kept as a shim — steps are re-expressed as IR outputs at plan
+    construction; prefer building expressions and ``repro.morph.to_plan``."""
 
     op: str
     se: tuple[int, int]
@@ -59,31 +84,35 @@ class Step:
             raise ValueError(f"unknown plan op {self.op!r}; expected one of {_OPS}")
         object.__setattr__(self, "se", (check_window(self.se[0]), check_window(self.se[1])))
 
-    def wings(self) -> tuple[int, int]:
-        return ((self.se[0] - 1) // 2, (self.se[1] - 1) // 2)
-
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
     name: str
-    steps: tuple[Step, ...]
+    steps: tuple[Step, ...] = ()
+    # Ordered (name, expr) outputs over Var("x"); derived from ``steps`` when
+    # not given, so legacy construction and expression construction produce
+    # the same kind of plan (and equal plans hash equal for the cache).
+    outputs: tuple[tuple[str, MorphExpr], ...] = ()
+
+    def __post_init__(self):
+        if not self.outputs:
+            if not self.steps:
+                raise ValueError("a Plan needs steps or expression outputs")
+            object.__setattr__(self, "outputs", steps_to_outputs(self.steps))
 
     def halo(self) -> tuple[int, int]:
-        """Per-axis halo a tile needs so its interior is exact after the whole
-        chain: contamination marches in one SE wing per sequential pass, so
-        wings sum over expanded primitives — opening/closing count twice,
-        gradient once (its min and max branches run in parallel)."""
+        """Per-axis halo a tile needs so its interior is exact after the
+        whole chain — derived by graph traversal (sequential primitives sum
+        their wings, parallel branches take the max, bounded iteration
+        multiplies), not by a per-op multiplier table."""
         gh = gw = 0
-        for s in self.steps:
-            wh, ww = s.wings()
-            mult = 2 if s.op in ("opening", "closing") else 1
-            gh += mult * wh
-            gw += mult * ww
+        for _, e in self.outputs:
+            h, w = expr_halo(e)
+            gh, gw = max(gh, h), max(gw, w)
         return gh, gw
 
     def output_names(self) -> tuple[str, ...]:
-        names = tuple(s.save_as for s in self.steps if s.save_as)
-        return names if names else ("out",)
+        return tuple(n for n, _ in self.outputs)
 
 
 def single_op_plan(op: str, se: tuple[int, int]) -> Plan:
@@ -122,21 +151,7 @@ def register_plan(plan: Plan) -> Plan:
     return plan
 
 
-def _expand(step: Step) -> tuple[tuple[str, tuple[int, int]], ...]:
-    """Composite -> primitive (min/max, se) sequence. ``gradient`` stays
-    special-cased in the executor (parallel branches, widened difference)."""
-    if step.op == "erode":
-        return (("min", step.se),)
-    if step.op == "dilate":
-        return (("max", step.se),)
-    if step.op == "opening":
-        return (("min", step.se), ("max", step.se))
-    if step.op == "closing":
-        return (("max", step.se), ("min", step.se))
-    raise ValueError(f"_expand does not handle {step.op!r}")
-
-
-def mask_outside(x: jnp.ndarray, rect: jnp.ndarray, neutral) -> jnp.ndarray:
+def mask_outside(x: jax.Array, rect: jax.Array, neutral) -> jax.Array:
     """Overwrite everything outside each image's [y0,y1)x[x0,x1) with
     ``neutral`` — the trace-time-shaped, data-dependent analog of the
     kernels' virtual border padding."""
@@ -161,39 +176,49 @@ def build_executor(
     megakernel (PR 1); ``"jnp"`` through the pure-XLA separable passes —
     bit-exact by the kernels' oracle contract, so the choice is purely a
     deployment decision (service.py picks per backend/interpret mode).
+
+    The plan's output expressions are evaluated with a masking hook: each
+    primitive's input has everything outside the valid rect overwritten with
+    that op's neutral element, the graph-derived generalization of the old
+    per-step masking loop (and of its special-cased dual-neutral gradient).
     """
+    backend = check_backend(backend)
     policy = policy or DispatchPolicy.calibrated()
     interpret = resolve_interpret(interpret, policy)
-    if backend not in ("jnp", "kernel"):
-        raise ValueError(f"backend must be 'jnp'|'kernel', got {backend!r}")
 
-    def prim(x, opname, se):
+    def prim(mop, x, se):
         if backend == "kernel":
-            fn = erode2d_tpu if opname == "min" else dilate2d_tpu
+            fn = erode2d_tpu if mop.name == "min" else dilate2d_tpu
             return fn(x, se, policy=policy, interpret=interpret)
-        fn = core_erode if opname == "min" else core_dilate
+        fn = core_erode if mop.name == "min" else core_dilate
         return fn(x, se, policy=policy)
 
     def run(x, rect):
-        outs = {}
-        for step in plan.steps:
-            if step.op == "gradient":
-                d = prim(mask_outside(x, rect, MAX.neutral(x.dtype)), "max", step.se)
-                e = prim(mask_outside(x, rect, MIN.neutral(x.dtype)), "min", step.se)
-                if jnp.issubdtype(x.dtype, jnp.integer):
-                    y = d.astype(jnp.int32) - e.astype(jnp.int32)
-                else:
-                    y = d - e
-            else:
-                y = x
-                for opname, se in _expand(step):
-                    op = MIN if opname == "min" else MAX
-                    y = prim(mask_outside(y, rect, op.neutral(y.dtype)), opname, se)
-            if step.save_as:
-                outs[step.save_as] = y.astype(step.astype) if step.astype else y
-            x = y
-        if not outs:
-            outs["out"] = x
+        def pre(v, mop):
+            return mask_outside(v, rect, mop.neutral(v.dtype))
+
+        memo: dict = {}
+        outs = {
+            name: evaluate(e, {"x": x}, prim=prim, pre_prim=pre, memo=memo)
+            for name, e in plan.outputs
+        }
         return outs
 
     return jax.jit(run)
+
+
+__all__ = [
+    "Backend",
+    "VALID_BACKENDS",
+    "check_backend",
+    "Step",
+    "Plan",
+    "single_op_plan",
+    "document_cleanup_plan",
+    "PLANS",
+    "get_plan",
+    "register_plan",
+    "mask_outside",
+    "build_executor",
+    "to_plan",
+]

@@ -35,7 +35,14 @@ from repro.serve.morph.buckets import (
     crop_from_bucket,
     valid_rect,
 )
-from repro.serve.morph.plans import Plan, build_executor, get_plan, single_op_plan
+from repro.morph.plan_compile import to_plan
+from repro.serve.morph.plans import (
+    Plan,
+    build_executor,
+    check_backend,
+    get_plan,
+    single_op_plan,
+)
 from repro.serve.morph.tiling import run_tiled
 
 
@@ -178,7 +185,8 @@ class MorphService:
             # and far faster than interpreting Pallas.
             self.backend = "jnp" if self.interpret else "kernel"
         else:
-            self.backend = self.config.backend
+            # fail loudly at construction, not inside the batcher thread
+            self.backend = check_backend(self.config.backend)
         self.cache = ExecutableCache(self.config.cache_size)
         self._stats = ServiceStats(self.config.stats_window)
         self._batcher = MicroBatcher(
@@ -212,11 +220,21 @@ class MorphService:
         self._batcher.submit(req)
         return req.future
 
+    def submit_expr(self, img, expr, name: str | None = None) -> Future:
+        """Morphology-expression request (``repro.morph``): any graph over
+        ``Var("x")`` — including ``BoundedIter`` reconstruction chains — is
+        compiled into a plan and served; equal expressions share one cached
+        executable."""
+        return self.submit_plan(img, to_plan(expr, name=name))
+
     def run(self, img, op: str = "erode", se=(3, 3)):
         return self.submit(img, op, se).result()
 
     def run_plan(self, img, plan: "str | Plan"):
         return self.submit_plan(img, plan).result()
+
+    def run_expr(self, img, expr, name: str | None = None):
+        return self.submit_expr(img, expr, name).result()
 
     def run_batch(self, imgs, plan: "str | Plan") -> list:
         """Synchronous convenience: submit all, wait for all, keep order."""

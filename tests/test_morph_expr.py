@@ -1,0 +1,358 @@
+"""Morphology expression IR: structural analyses, lowering bit-exactness
+across backends, expr-derived serving plans, and bounded-iteration serving.
+
+The load-bearing invariants:
+
+* ``to_plan(expr).halo()`` equals the legacy hand-computed rule (wings
+  summed per sequential pass, opening/closing twice, gradient once) for
+  every plan op and for randomly composed chains;
+* IR-lowered operators are bit-exact against the independent naive oracle
+  and across the jnp / kernel backends;
+* the three gradient paths (core, kernel, serving plan) agree on the
+  widened output dtype for every supported input dtype;
+* tiled execution through an expr-built plan is bit-exact at tile seams;
+* an iterative operator (reconstruction by dilation, bounded iterations)
+  round-trips through ``MorphService``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DispatchPolicy,
+    closing,
+    dilate_naive,
+    erode_naive,
+    gradient,
+    opening,
+    reconstruct_by_dilation,
+)
+from repro.core.types import widen_dtype, widened_sub
+from repro.kernels import gradient2d_tpu
+from repro.morph import (
+    BoundedIter,
+    Cast,
+    Var,
+    X,
+    evaluate,
+    free_vars,
+    halo,
+    is_gradient,
+    lower_kernel,
+    lower_xla,
+    masking_requirements,
+    node_count,
+    occo_expr,
+    op_expr,
+    reconstruct_by_dilation_expr,
+    to_plan,
+)
+from repro.morph.expr import StructuringElement
+from repro.serve.morph import (
+    MorphService,
+    ServiceConfig,
+    Plan,
+    Step,
+    build_executor,
+    check_backend,
+    run_tiled,
+    single_op_plan,
+)
+from repro.serve.morph.plans import _OPS
+
+RNG = np.random.default_rng(11)
+
+
+def rand(shape, dtype=np.uint8):
+    if np.issubdtype(dtype, np.floating):
+        return RNG.standard_normal(shape).astype(dtype)
+    info = np.iinfo(dtype)
+    return RNG.integers(info.min, info.max, shape, dtype=dtype)
+
+
+def legacy_step_halo(steps):
+    """The old hand-maintained rule from plans.py: wings summed over
+    sequential passes, opening/closing counted twice, gradient once."""
+    gh = gw = 0
+    for op, (h, w) in steps:
+        mult = 2 if op in ("opening", "closing") else 1
+        gh += mult * (h - 1) // 2
+        gw += mult * (w - 1) // 2
+    return gh, gw
+
+
+# ------------------------------------------------------------------ structure
+def test_structuring_element_coercion_and_validation():
+    assert StructuringElement.of((3, 5)).pair == (3, 5)
+    assert StructuringElement.of(7).pair == (7, 7)
+    assert StructuringElement.of((9, 3)).wings == (4, 1)
+    with pytest.raises(ValueError):
+        StructuringElement.of((2, 3))
+
+
+def test_exprs_are_hashable_and_structurally_equal():
+    a = X.opening((3, 3)).gradient((5, 5))
+    b = X.opening((3, 3)).gradient((5, 5))
+    assert a == b and hash(a) == hash(b)
+    assert a != X.opening((3, 3)).gradient((5, 7))
+
+
+def test_gradient_pattern_recognized():
+    assert is_gradient(X.gradient((3, 3)))
+    assert is_gradient(X.closing((5, 5)).gradient((3, 3)))
+    assert not is_gradient(X.dilate((3, 3)) - X.erode((5, 5)))  # SE mismatch
+    assert not is_gradient(X.tophat((3, 3)))
+
+
+def test_free_vars_and_node_count():
+    rec = reconstruct_by_dilation_expr(Var("marker"), Var("mask"), (3, 3), iters=8)
+    assert free_vars(rec) == {"marker", "mask"}  # loop var is bound
+    assert free_vars(X.gradient((3, 3))) == {"x"}
+    # gradient shares its child: Var + Dilate + Erode + Sub = 4 distinct nodes
+    assert node_count(X.gradient((3, 3))) == 4
+
+
+def test_masking_requirements_cover_both_neutrals():
+    reqs = masking_requirements(X.gradient((3, 3)))
+    assert ("min", (3, 3)) in reqs and ("max", (3, 3)) in reqs
+
+
+# ---------------------------------------------------------- expr-derived halo
+@pytest.mark.parametrize("op", _OPS)
+@pytest.mark.parametrize("se", [(3, 3), (9, 5), (1, 7), (31, 3)])
+def test_single_op_halo_matches_legacy_rule(op, se):
+    assert to_plan(op_expr(op, se)).halo() == legacy_step_halo([(op, se)])
+    assert single_op_plan(op, se).halo() == legacy_step_halo([(op, se)])
+
+
+def test_random_chain_halo_matches_legacy_rule():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = rng.integers(1, 5)
+        steps = [
+            (
+                _OPS[rng.integers(len(_OPS))],
+                (1 + 2 * int(rng.integers(0, 8)), 1 + 2 * int(rng.integers(0, 8))),
+            )
+            for _ in range(n)
+        ]
+        cur = X
+        for op, se in steps:
+            cur = op_expr(op, se, cur)
+        assert halo(cur) == legacy_step_halo(steps), steps
+        plan = Plan("chain", tuple(Step(op, se) for op, se in steps))
+        assert plan.halo() == legacy_step_halo(steps), steps
+
+
+def test_bounded_iter_halo_scales_with_iterations():
+    body_se = (3, 3)
+    rec = reconstruct_by_dilation_expr(
+        X.erode((5, 5)), X, body_se, iters=10, until_stable=False
+    )
+    # init = Min(erode(5,5) -> (2,2), x -> 0) = (2,2); 10 body dilations
+    assert halo(rec) == (2 + 10 * 1, 2 + 10 * 1)
+    stable = reconstruct_by_dilation_expr(
+        X.erode((5, 5)), X, body_se, iters=10, until_stable=True
+    )
+    # the until-stable form seeds the loop with one extra body application
+    assert halo(stable) == (2 + 11 * 1, 2 + 11 * 1)
+
+
+# ----------------------------------------------------- lowering bit-exactness
+def naive_ref(op, x, se):
+    xj = jnp.asarray(x)
+    if op == "erode":
+        return erode_naive(xj, se)
+    if op == "dilate":
+        return dilate_naive(xj, se)
+    if op == "opening":
+        return dilate_naive(erode_naive(xj, se), se)
+    if op == "closing":
+        return erode_naive(dilate_naive(xj, se), se)
+    if op == "gradient":
+        return widened_sub(dilate_naive(xj, se), erode_naive(xj, se))
+    if op == "tophat":
+        return widened_sub(xj, dilate_naive(erode_naive(xj, se), se))
+    if op == "blackhat":
+        return widened_sub(erode_naive(dilate_naive(xj, se), se), xj)
+    raise ValueError(op)
+
+
+ALL_OPS = _OPS + ("tophat", "blackhat")
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_lower_xla_matches_naive_oracle(op):
+    x = rand((37, 53))
+    got = np.asarray(lower_xla(op_expr(op, (5, 7)))(jnp.asarray(x)))
+    want = np.asarray(naive_ref(op, x, (5, 7)))
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_lower_kernel_matches_lower_xla(op):
+    x = jnp.asarray(rand((40, 66)))
+    expr = op_expr(op, (3, 5))
+    a = np.asarray(lower_xla(expr)(x))
+    b = np.asarray(lower_kernel(expr, interpret=True)(x))
+    assert a.dtype == b.dtype
+    np.testing.assert_array_equal(a, b)
+
+
+def test_lowering_composed_chain_across_backends():
+    x = jnp.asarray(rand((33, 49)))
+    expr = X.opening((3, 3)).closing((5, 5)).gradient((3, 3))
+    a = np.asarray(lower_xla(expr)(x))
+    b = np.asarray(lower_kernel(expr, interpret=True)(x))
+    np.testing.assert_array_equal(a, b)
+    # and the chain equals composing the public core ops
+    want = np.asarray(gradient(closing(opening(x, (3, 3)), (5, 5)), (3, 3)))
+    np.testing.assert_array_equal(a, want)
+
+
+def test_shared_subgraph_evaluated_once():
+    calls = []
+
+    def prim(op, v, se):
+        calls.append(op.name)
+        return v
+
+    evaluate(X.gradient((3, 3)), {"x": jnp.zeros((8, 8))}, prim=prim)
+    assert sorted(calls) == ["max", "min"]  # shared child walked once
+
+
+def test_occo_expr_matches_derived():
+    from repro.core import occo
+
+    x = jnp.asarray(rand((30, 30)))
+    got = np.asarray(lower_xla(occo_expr(X, (3, 3)))(x))
+    np.testing.assert_array_equal(got, np.asarray(occo(x, (3, 3))))
+
+
+# ------------------------------------------------- cross-path gradient dtypes
+@pytest.mark.parametrize("dtype", [np.uint8, np.int8, np.int32, np.float32])
+def test_gradient_dtype_agrees_across_all_paths(dtype):
+    x = rand((24, 40), dtype)
+    want = widen_dtype(dtype)
+    core_out = gradient(jnp.asarray(x), (3, 3))
+    kernel_fused = gradient2d_tpu(jnp.asarray(x), (3, 3), interpret=True)
+    kernel_two_pass = gradient2d_tpu(
+        jnp.asarray(x), (3, 3), fused=False, interpret=True
+    )
+    assert core_out.dtype == want
+    assert kernel_fused.dtype == want
+    assert kernel_two_pass.dtype == want
+    ex = build_executor(single_op_plan("gradient", (3, 3)))
+    plan_out = ex(jnp.asarray(x)[None], jnp.asarray([[0, 24, 0, 40]], jnp.int32))
+    assert plan_out["out"].dtype == want
+    np.testing.assert_array_equal(np.asarray(core_out), np.asarray(kernel_fused))
+    np.testing.assert_array_equal(np.asarray(core_out), np.asarray(plan_out["out"][0]))
+
+
+# --------------------------------------------------------- expr-built serving
+def test_to_plan_rejects_foreign_inputs():
+    with pytest.raises(ValueError, match="Var"):
+        to_plan(Var("marker").dilate((3, 3)))
+
+
+def test_to_plan_equals_step_plan_executables():
+    """An expr-built plan and the legacy Step plan of the same chain produce
+    identical outputs (and identical halos)."""
+    img = rand((45, 58))
+    steps_plan = Plan(
+        "oc_edges",
+        (Step("opening", (3, 3)), Step("gradient", (3, 3), save_as="edges")),
+    )
+    expr_plan = to_plan(
+        {"edges": X.opening((3, 3)).gradient((3, 3))}, name="oc_edges_expr"
+    )
+    assert steps_plan.halo() == expr_plan.halo()
+    rect = jnp.asarray([[0, 45, 0, 58]], jnp.int32)
+    xb = jnp.asarray(img[None])
+    a = build_executor(steps_plan)(xb, rect)
+    b = build_executor(expr_plan)(xb, rect)
+    np.testing.assert_array_equal(np.asarray(a["edges"]), np.asarray(b["edges"]))
+
+
+def test_expr_plan_tiled_bit_exact_at_seams():
+    """Tiled execution through an expr-built plan stitches bit-exactly —
+    the halo driving tiling comes from graph traversal."""
+    img = rand((75, 90))
+    expr = X.closing((5, 5)).gradient((3, 3))
+    plan = to_plan(expr, name="close_edges")
+    ex = build_executor(plan)
+    outs = run_tiled(
+        img, plan, lambda t, r: ex(jnp.asarray(t), jnp.asarray(r)),
+        tile_interior=(16, 16), launch_batch=4,
+    )
+    want = np.asarray(lower_xla(expr)(jnp.asarray(img)))
+    np.testing.assert_array_equal(outs["out"], want)
+
+
+def test_expr_plan_through_service_bucketed():
+    img = rand((40, 52))
+    expr = X.opening((3, 3)).closing((5, 5))
+    with MorphService(ServiceConfig(buckets=((64, 128),), window_ms=1.0)) as svc:
+        got = svc.run_expr(img, expr, name="smooth")
+    want = np.asarray(closing(opening(jnp.asarray(img), (3, 3)), (5, 5)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_reconstruction_round_trips_through_service():
+    """Opening-by-reconstruction (erode marker, geodesically re-dilate under
+    the image) as a bounded-iteration plan == core.derived's while-loop
+    reconstruction, served through buckets with masking."""
+    img = rand((40, 48))
+    iters = 64  # >= image diameter / wing, so bounded == converged
+    expr = reconstruct_by_dilation_expr(
+        X.erode((7, 7)), X, (3, 3), iters=iters, until_stable=False
+    )
+    with MorphService(ServiceConfig(buckets=((64, 128),), window_ms=1.0)) as svc:
+        got = svc.run_expr(img, expr, name="open_by_reconstruction")
+    xj = jnp.asarray(img)
+    want = np.asarray(
+        reconstruct_by_dilation(
+            jnp.asarray(np.asarray(erode_naive(xj, (7, 7)))), xj, (3, 3)
+        )
+    )
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == img.dtype
+
+
+def test_bounded_iter_until_stable_matches_fori_when_converged():
+    x = jnp.asarray(rand((24, 24)))
+    marker = Var("m")
+    stable = reconstruct_by_dilation_expr(marker, Var("x"), iters=64, until_stable=True)
+    fixed = reconstruct_by_dilation_expr(marker, Var("x"), iters=64, until_stable=False)
+    m = jnp.minimum(x, 90)
+    a = np.asarray(lower_xla(stable)(m=m, x=x))
+    b = np.asarray(lower_xla(fixed)(m=m, x=x))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_cast_clip_nodes():
+    x = jnp.asarray(rand((16, 16)))
+    expr = Cast(X.gradient((3, 3)).clip(0, 255), "uint8")
+    out = lower_xla(expr)(x)
+    assert out.dtype == jnp.uint8
+
+
+# ----------------------------------------------------------- backend validity
+def test_backend_typo_fails_loudly():
+    with pytest.raises(ValueError, match="backend"):
+        build_executor(single_op_plan("erode", (3, 3)), backend="kernl")
+    with pytest.raises(ValueError, match="backend"):
+        MorphService(ServiceConfig(backend="jnpp"))
+    assert check_backend("jnp") == "jnp"
+    assert check_backend("kernel") == "kernel"
+
+
+def test_policy_collapses_legacy_kwargs():
+    p = DispatchPolicy()
+    q = p.with_overrides(fused=False, method="vhgw", lane_strategy="xla", interpret=True)
+    assert (q.fused_2d, q.method, q.lane_strategy, q.interpret) == (
+        False, "vhgw", "xla", True,
+    )
+    assert p.with_overrides() is p
+    assert q.cache_token() != p.cache_token()
