@@ -20,6 +20,7 @@ import os
 from typing import Literal
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.linear_pass import linear_1d, linear_1d_paired, linear_1d_tree
 from repro.core.types import Array, as_op, check_window
@@ -28,6 +29,22 @@ from repro.core.vhgw import vhgw_1d
 Method = Literal["auto", "linear", "linear_paired", "linear_tree", "vhgw"]
 
 _CALIBRATION_FILE = os.path.join(os.path.dirname(__file__), "calibration.json")
+
+# calibrated() memo: {"policy": ((calib_mtime, cost_mtime), DispatchPolicy)}
+_CALIBRATED_CACHE: dict = {}
+
+
+def _file_mtime(path: str):
+    try:
+        return os.stat(path).st_mtime_ns
+    except OSError:
+        return None
+
+
+def _cost_table_mtime():
+    from repro.morph.opt.cost import COST_TABLE_FILE
+
+    return _file_mtime(COST_TABLE_FILE)
 
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
@@ -72,6 +89,12 @@ class DispatchPolicy:
     w0_minor: int = 15
     w0_major: int = 31
     small_method: Method = "linear_tree"  # beyond-paper default; paper used "linear"
+    # IR optimizer level applied by the lowerings (repro.morph.opt.optimize):
+    # 0 = off, 1 = structural passes (CSE / folding / dead-output elim /
+    # gradient canonicalization), 2 = plus cost-model-driven SE
+    # decomposition. Part of the policy so serving cache keys capture it and
+    # so callers opt out per call site (DispatchPolicy(opt_level=0)).
+    opt_level: int = 2
     fused_2d: bool = True
     # Pallas interpret-mode override: None defers to the env var / backend
     # default (see resolve_interpret). Part of the policy so serving cache
@@ -140,18 +163,48 @@ class DispatchPolicy:
 
     @classmethod
     def calibrated(cls) -> "DispatchPolicy":
-        """Load thresholds measured by benchmarks/bench_hybrid.py, if any."""
+        """The machine-local policy, memoized on calibration-file mtimes.
+
+        Thresholds come from the measured per-device cost table
+        (``cost_table.json``, fit by ``bench_hybrid --fit-cost-table``) when
+        one exists for this device — its fitted curves imply the crossovers
+        — else from the scalar ``calibration.json``, else the defaults.
+        This used to re-``os.path.exists`` + ``json.load`` on *every*
+        ``morph_1d`` call; now a stat comparison is the steady-state cost
+        and a refit (new mtime) invalidates the cache.
+        """
+        mt = (_file_mtime(_CALIBRATION_FILE), _cost_table_mtime())
+        cached = _CALIBRATED_CACHE.get("policy")
+        if cached is not None and cached[0] == mt:
+            return cached[1]
+        policy = cls._load_calibrated()
+        _CALIBRATED_CACHE["policy"] = (mt, policy)
+        return policy
+
+    @classmethod
+    def _load_calibrated(cls) -> "DispatchPolicy":
+        kw: dict = {}
         if os.path.exists(_CALIBRATION_FILE):
             with open(_CALIBRATION_FILE) as f:
                 d = json.load(f)
-            return cls(
+            kw = dict(
                 w0_minor=int(d.get("w0_minor", cls.w0_minor)),
                 w0_major=int(d.get("w0_major", cls.w0_major)),
                 small_method=d.get("small_method", "linear_tree"),
                 fused_2d=bool(d.get("fused_2d", True)),
                 w0_fused=int(d.get("w0_fused", cls.w0_fused)),
             )
-        return cls()
+        # the measured cost table, when present for this device, supersedes
+        # the scalar calibration: its curves *imply* the crossovers
+        from repro.morph.opt.cost import load_measured
+
+        measured = load_measured()
+        if measured is not None:
+            for field in ("w0_minor", "w0_major", "w0_fused", "small_method"):
+                if field in measured.crossovers:
+                    v = measured.crossovers[field]
+                    kw[field] = v if field == "small_method" else int(v)
+        return cls(**kw)
 
 
 _METHODS = {
@@ -171,7 +224,14 @@ def morph_1d(
     method: Method = "auto",
     policy: DispatchPolicy | None = None,
 ) -> Array:
-    """1-D running min/max with hybrid method selection."""
+    """1-D running min/max with hybrid method selection.
+
+    ``method="auto"`` consults the per-device cost model
+    (``repro.morph.opt.cost``): measured per-(axis kind, method, dtype)
+    curves when a fitted ``cost_table.json`` matches the policy, else the
+    analytic model built from the policy's own thresholds — which
+    reproduces the historical ``w <= w0`` branch exactly.
+    """
     op = as_op(op)
     w = check_window(w)
     if method == "auto":
@@ -179,7 +239,10 @@ def morph_1d(
         if policy.method != "auto":
             method = policy.method
         else:
-            minor = (axis % x.ndim) == x.ndim - 1
-            w0 = policy.w0_minor if minor else policy.w0_major
-            method = policy.small_method if w <= w0 else "vhgw"
+            from repro.morph.opt.cost import cost_model_for
+
+            kind = "minor" if (axis % x.ndim) == x.ndim - 1 else "major"
+            method = cost_model_for(policy).best_method(
+                kind, w, jnp.dtype(x.dtype).name, small=policy.small_method
+            )
     return _METHODS[method](x, w, axis=axis, op=op)

@@ -43,14 +43,23 @@ from repro.core.types import MAX, MIN, Array, as_op, check_window
 from repro.kernels.morph_vhgw import _scan_segments
 
 
-def _resolve_methods(se, method, policy: DispatchPolicy | None):
+def _resolve_methods(se, method, policy: DispatchPolicy | None, dtype="uint8"):
     """Per-axis linear-vs-vHGW choice. Both fused passes are sublane passes
     (the W pass runs after the in-kernel transpose), and both work on a
-    VMEM-resident strip, so the dedicated ``w0_fused`` threshold applies —
-    not the HBM-pass thresholds w0_minor/w0_major (see DESIGN.md §5)."""
+    VMEM-resident strip, so the dedicated ``fused`` axis-kind cost curves
+    apply — not the HBM-pass major/minor curves (see DESIGN.md §5). The
+    query goes through the per-device cost model
+    (``repro.morph.opt.cost.cost_model_for``); without a measured table it
+    degrades to the policy's ``w <= w0_fused`` scalar branch exactly."""
     policy = policy or DispatchPolicy.calibrated()
     if method == "auto":
-        return tuple("linear" if w <= policy.w0_fused else "vhgw" for w in se)
+        from repro.morph.opt.cost import cost_model_for
+
+        model = cost_model_for(policy)
+        dt = jnp.dtype(dtype).name
+        return tuple(
+            model.best_method("fused", w, dt, small="linear") for w in se
+        )
     if method in ("linear", "vhgw"):
         return (method, method)
     raise ValueError(f"fused kernel supports 'auto'|'linear'|'vhgw', got {method!r}")
@@ -240,7 +249,7 @@ def morph2d_fused(
     wing_h, wing_w = (w_h - 1) // 2, (w_w - 1) // 2
     if block_w is None:
         block_w = _pick_block_w(wing_w, h, w_h, jnp.dtype(x.dtype).itemsize)
-    method_h, method_w = _resolve_methods((w_h, w_w), method, policy)
+    method_h, method_w = _resolve_methods((w_h, w_w), method, policy, x.dtype)
     core, halo, gw = _pad_for_grid(x, wing_h, wing_w, block_w, mop.neutral(x.dtype))
     hp = h + 2 * wing_h
     halo_cols = halo.shape[-1] // gw
@@ -298,7 +307,7 @@ def gradient2d_fused(
     if block_w is None:
         # gradient holds two strips (min and max pipelines): halve the budget
         block_w = _pick_block_w(wing_w, h, w_h, 2 * jnp.dtype(x.dtype).itemsize)
-    method_h, method_w = _resolve_methods((w_h, w_w), method, policy)
+    method_h, method_w = _resolve_methods((w_h, w_w), method, policy, x.dtype)
     core_min, halo_min, gw = _pad_for_grid(x, wing_h, wing_w, block_w, MIN.neutral(x.dtype))
     core_max, halo_max, _ = _pad_for_grid(x, wing_h, wing_w, block_w, MAX.neutral(x.dtype))
     hp = h + 2 * wing_h

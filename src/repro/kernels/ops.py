@@ -128,13 +128,33 @@ def _fused_method(policy: DispatchPolicy) -> str:
     return "linear"
 
 
+def _fused_wins(se, dtype, policy: DispatchPolicy, *, gradient: bool = False) -> bool:
+    """Per-node fused-vs-two-pass decision from the per-device cost model.
+
+    With no measured ``cost_table.json`` (or a hand-tuned policy) the
+    analytic model always answers True, preserving the historical
+    ``policy.fused_2d``-only dispatch; a measured table lets a device where
+    the two-pass pipeline wins for some SE/dtype route just those nodes."""
+    from repro.morph.opt.cost import cost_model_for
+
+    return cost_model_for(policy).fused_wins(
+        se, jnp.dtype(dtype).name, gradient=gradient
+    )
+
+
 def raw_morph2d(
     x: Array, se, op: str, *, policy: DispatchPolicy, interpret: bool | None = None
 ) -> Array:
     """Backend primitive for the kernel lowering: fused megakernel when the
-    policy and SE allow, two-pass + transpose pipeline otherwise."""
+    policy, the SE, and the per-node cost model allow; two-pass + transpose
+    pipeline otherwise."""
     interpret = resolve_interpret(interpret, policy)
-    if policy.fused_2d and fused_supports(se) and x.ndim in (2, 3):
+    if (
+        policy.fused_2d
+        and fused_supports(se)
+        and x.ndim in (2, 3)
+        and _fused_wins(se, x.dtype, policy)
+    ):
         return morph2d_fused(
             x, tuple(se), op=op, method=_fused_method(policy),
             policy=policy, interpret=interpret,
@@ -148,7 +168,12 @@ def raw_gradient2d(
     """Backend primitive for the gradient pattern: the shared-strip fused
     gradient kernel, or two-pass dilate/erode plus a widened subtraction."""
     interpret = resolve_interpret(interpret, policy)
-    if policy.fused_2d and fused_supports(se) and x.ndim in (2, 3):
+    if (
+        policy.fused_2d
+        and fused_supports(se)
+        and x.ndim in (2, 3)
+        and _fused_wins(se, x.dtype, policy, gradient=True)
+    ):
         return gradient2d_fused(
             x, tuple(se), method=_fused_method(policy),
             policy=policy, interpret=interpret,

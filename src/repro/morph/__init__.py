@@ -21,6 +21,7 @@ from repro.morph.expr import (
     Clip,
     Dilate,
     Erode,
+    Gradient,
     Max,
     Mean,
     Min,
@@ -38,14 +39,17 @@ from repro.morph.expr import (
 from repro.morph.interp import evaluate, is_gradient
 from repro.morph.lower_kernel import lower_kernel
 from repro.morph.lower_xla import lower_xla
+from repro.morph.opt import CostModel, cost_model_for, optimize, prim_count
 from repro.morph.plan_compile import op_expr, steps_to_outputs, to_plan
 
 __all__ = [
     "BoundedIter",
     "Cast",
     "Clip",
+    "CostModel",
     "Dilate",
     "Erode",
+    "Gradient",
     "Max",
     "Mean",
     "Min",
@@ -67,6 +71,9 @@ __all__ = [
     "is_gradient",
     "lower_kernel",
     "lower_xla",
+    "cost_model_for",
+    "optimize",
+    "prim_count",
     "op_expr",
     "steps_to_outputs",
     "to_plan",

@@ -22,6 +22,7 @@ from repro.morph.expr import (
     Clip,
     Dilate,
     Erode,
+    Gradient,
     Max,
     Mean,
     Min,
@@ -32,7 +33,9 @@ from repro.morph.expr import (
 
 _BINARY = (Sub, Min, Max, Mean)
 _UNARY = (Clip, Cast)
-_PRIMS = (Erode, Dilate)
+# Gradient is a primitive for analysis purposes: one child, SE wings of
+# contamination, and (being dilate - erode over one value) both neutrals.
+_PRIMS = (Erode, Dilate, Gradient)
 
 
 def halo(expr: MorphExpr) -> tuple[int, int]:
@@ -97,7 +100,11 @@ def masking_requirements(expr: MorphExpr) -> tuple[tuple[str, tuple[int, int]], 
             return
         if isinstance(e, _PRIMS):
             go(e.child)
-            out.append(("min" if isinstance(e, Erode) else "max", e.se.pair))
+            if isinstance(e, Gradient):  # dilate - erode: both neutrals
+                out.append(("max", e.se.pair))
+                out.append(("min", e.se.pair))
+            else:
+                out.append(("min" if isinstance(e, Erode) else "max", e.se.pair))
         elif isinstance(e, _BINARY):
             go(e.a)
             go(e.b)

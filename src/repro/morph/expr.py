@@ -138,6 +138,28 @@ class Dilate(MorphExpr):
 
 
 @dataclasses.dataclass(frozen=True)
+class Gradient(MorphExpr):
+    """First-class morphological gradient: ``dilate(c, se) - erode(c, se)``
+    over one shared child, in the centralized widened dtype.
+
+    The builder API still writes gradients as ``Sub(Dilate, Erode)`` (the
+    paper's algebra); the optimizer's canonicalization pass
+    (``morph.opt.passes.fuse_gradients``) rewrites that pattern into this
+    node when fusing cannot lose sharing, which is what lets the kernel
+    lowering emit the single-launch fused gradient kernel without the old
+    ad-hoc evaluator hook. Under masked (serving) evaluation the node
+    expands back into its two primitives so each gets its own neutral.
+    """
+
+    child: MorphExpr
+    se: StructuringElement
+
+    def __post_init__(self):
+        _check_expr(self.child, "Gradient.child")
+        object.__setattr__(self, "se", StructuringElement.of(self.se))
+
+
+@dataclasses.dataclass(frozen=True)
 class Sub(MorphExpr):
     """``a - b`` in the centralized widened dtype (core.types.widened_sub)."""
 

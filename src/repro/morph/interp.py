@@ -32,6 +32,7 @@ from repro.morph.expr import (
     Clip,
     Dilate,
     Erode,
+    Gradient,
     Max,
     Mean,
     Min,
@@ -94,6 +95,19 @@ def evaluate(
             return run_prim(MIN, node)
         if isinstance(node, Dilate):
             return run_prim(MAX, node)
+        if isinstance(node, Gradient):
+            # First-class gradient (produced by the optimizer's canonical
+            # pattern pass). With a gradient hook and no masking it is one
+            # fused launch; under masked evaluation it expands to its two
+            # primitives so each pass gets its own neutral — exactly the
+            # semantics of the Sub(Dilate, Erode) form it replaced.
+            x = ev(node.child)
+            se = node.se.pair
+            if gradient_prim is not None and pre_prim is None:
+                return gradient_prim(x, se)
+            xd = pre_prim(x, MAX) if pre_prim is not None else x
+            xe = pre_prim(x, MIN) if pre_prim is not None else x
+            return widened_sub(prim(MAX, xd, se), prim(MIN, xe, se))
         if isinstance(node, Sub):
             if gradient_prim is not None and pre_prim is None and is_gradient(node):
                 return gradient_prim(ev(node.a.child), node.a.se.pair)

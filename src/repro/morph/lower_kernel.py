@@ -1,12 +1,15 @@
 """Lower a morphology expression to the fused Pallas TPU kernels.
 
 Erode/Dilate nodes dispatch through ``kernels.ops.raw_morph2d`` (the fused
-single-``pallas_call`` megakernel when the policy and SE allow, the legacy
-two-pass + transpose pipeline otherwise — all governed by
-:class:`DispatchPolicy`), and the evaluator's pattern hook rewrites
-``Sub(Dilate(c, se), Erode(c, se))`` into the single-launch fused gradient
-kernel, so ``X.gradient(se)`` costs 2 reads + 1 write instead of two full
-operators plus a subtraction.
+single-``pallas_call`` megakernel when the policy, SE and per-node cost
+model allow, the legacy two-pass + transpose pipeline otherwise — all
+governed by :class:`DispatchPolicy`). Graphs are optimized first
+(``repro.morph.opt.optimize``): the optimizer's canonical pattern pass
+rewrites ``Sub(Dilate(c, se), Erode(c, se))`` into the first-class
+``Gradient`` node, which lowers to the single-launch fused gradient kernel
+— 2 reads + 1 write instead of two full operators plus a subtraction. The
+evaluator's legacy ``gradient_prim`` pattern hook is kept so *unoptimized*
+graphs (``opt_level=0`` A/B runs) still fuse the way they always did.
 
 Kernel modules are imported lazily inside the primitives: ``kernels.ops``
 itself builds its public entry points on this pass, and the morph package
@@ -23,6 +26,9 @@ def lower_kernel(
 ):
     """``expr | {name: expr}`` -> ``fn(x=None, **vars) -> array | {name: array}``."""
     policy = policy or DispatchPolicy.calibrated()
+    from repro.morph.opt import optimize
+
+    outputs = optimize(outputs, policy=policy, kinds=("fused", "fused"))
 
     def prim(op, x, se):
         from repro.kernels.ops import raw_morph2d

@@ -9,6 +9,11 @@ IR-lowered operator is the *same computation* as the legacy
 (named outputs share one memoized walk) and returns a plain function —
 callers jit. Works for any ``(..., H, W)`` leading-batch layout, exactly
 like the jnp primitives underneath.
+
+Graphs are optimized first (``repro.morph.opt.optimize`` at
+``policy.opt_level``; bit-exact by contract, opt out with
+``DispatchPolicy(opt_level=0)``), so shared subgraphs are computed once and
+cost-model-approved rewrites apply before any tracing.
 """
 from __future__ import annotations
 
@@ -19,6 +24,9 @@ from repro.morph.interp import make_lowering
 def lower_xla(outputs, *, policy: DispatchPolicy | None = None):
     """``expr | {name: expr}`` -> ``fn(x=None, **vars) -> array | {name: array}``."""
     policy = policy or DispatchPolicy.calibrated()
+    from repro.morph.opt import optimize
+
+    outputs = optimize(outputs, policy=policy, kinds=("major", "minor"))
 
     def prim(op, x, se):
         y = morph_1d(x, se[0], axis=-2, op=op, policy=policy)

@@ -1,0 +1,32 @@
+"""Cost-model-driven optimizer for the morphology expression IR.
+
+``optimize(expr | {name: expr}, *, level, cost_model)`` is the single public
+entry; all three lowerings (``lower_xla`` / ``lower_kernel`` / ``to_plan``)
+run it by default at ``DispatchPolicy.opt_level`` (opt out with
+``DispatchPolicy(opt_level=0)``). Passes live in
+:mod:`repro.morph.opt.passes`; the per-device measured/analytic cost model
+in :mod:`repro.morph.opt.cost` (fit via
+``python -m benchmarks.bench_hybrid --fit-cost-table``).
+"""
+from repro.morph.opt.cost import (
+    COST_TABLE_FILE,
+    CostModel,
+    cost_model_for,
+    device_kind,
+    fit_affine,
+    load_measured,
+    save_measured,
+)
+from repro.morph.opt.passes import optimize, prim_count
+
+__all__ = [
+    "COST_TABLE_FILE",
+    "CostModel",
+    "cost_model_for",
+    "device_kind",
+    "fit_affine",
+    "load_measured",
+    "save_measured",
+    "optimize",
+    "prim_count",
+]

@@ -80,16 +80,32 @@ def _normalize_outputs(outputs) -> tuple[tuple[str, MorphExpr], ...]:
     return items
 
 
-def to_plan(outputs, name: str | None = None):
+def to_plan(
+    outputs,
+    name: str | None = None,
+    *,
+    policy=None,
+    keep=None,
+):
     """Compile ``expr | {name: expr}`` into a serving ``Plan``.
 
     Outputs must be closed over the single input ``Var('x')`` (that is what
     the service feeds); halo and masking needs come from graph traversal,
     so any composition — including ``BoundedIter`` chains — is servable
     without per-op tables.
+
+    Graphs are optimized first (``repro.morph.opt.optimize`` at
+    ``policy.opt_level``; opt out via ``DispatchPolicy(opt_level=0)``):
+    shared erosions across named outputs compute once, nested same-op
+    primitives fold, the gradient pattern canonicalizes, and ``keep=``
+    drops outputs the caller never reads — so served plans get shorter
+    pass lists and tighter derived halos for free, while staying bit-exact
+    with the raw graph after cropping.
     """
+    from repro.morph.opt import optimize
     from repro.serve.morph.plans import Plan
 
+    outputs = optimize(outputs, policy=policy, keep=keep)
     items = _normalize_outputs(outputs)
     if name is None:
         name = f"expr_{abs(hash(items)) % 16**10:010x}"

@@ -7,6 +7,14 @@ oldest member has waited ``window_s``, whichever comes first — the standard
 serving trade of a bounded latency tax for batch occupancy. All JAX
 dispatch happens on the worker thread; callers only touch numpy arrays and
 ``concurrent.futures.Future`` results.
+
+With ``adaptive=True`` the window is load-aware: ``window_s`` becomes the
+*effective* window, bounded by ``[min_window_s, max_window_s]``. Each
+deadline dispatch that drains below the low-water mark halves the window
+(light load: the latency tax buys nothing), and each dispatch at or above
+the high-water mark doubles it toward the configured max (sustained
+pressure: coalescing pays). Mostly-idle services converge to near-zero
+added latency; saturated ones to full-window occupancy.
 """
 from __future__ import annotations
 
@@ -33,6 +41,8 @@ class MicroBatcher:
         *,
         max_batch: int = 64,
         window_s: float = 0.002,
+        adaptive: bool = False,
+        min_window_s: float = 0.0,
         name: str = "morph-batcher",
     ):
         if max_batch < 1:
@@ -40,6 +50,13 @@ class MicroBatcher:
         self._execute = execute_group
         self.max_batch = max_batch
         self.window_s = window_s
+        self.max_window_s = window_s
+        self.min_window_s = min(min_window_s, window_s)
+        self.adaptive = adaptive
+        # hysteresis marks: <= low water after a deadline expiry -> shrink,
+        # >= high water -> grow (a full batch always grows)
+        self._low_water = max(1, max_batch // 8)
+        self._high_water = max(2, max_batch // 2)
         self._q: queue.SimpleQueue = queue.SimpleQueue()
         self._cv = threading.Condition()
         self._outstanding = 0
@@ -108,6 +125,12 @@ class MicroBatcher:
             ]
             for key in due:
                 _, reqs = pending.pop(key)
+                if not draining:  # drain flushes partials; don't learn from it
+                    # backlog = work already queued behind this group; at a
+                    # zero-width window every group is size 1 by construction,
+                    # so size alone could never signal pressure and the window
+                    # would absorb at 0 — queued arrivals are the escape
+                    self._adapt(len(reqs), backlog=not self._q.empty() or bool(pending))
                 for i in range(0, len(reqs), self.max_batch):
                     self._dispatch(key, reqs[i : i + self.max_batch])
             # submit() and close() enqueue under one lock, so every request
@@ -115,6 +138,22 @@ class MicroBatcher:
             # nothing else, and pending empty means everything dispatched.
             if draining and not pending:
                 return
+
+    def _adapt(self, group_size: int, *, backlog: bool = False) -> None:
+        """Multiplicative-increase / multiplicative-decrease window control,
+        driven by how full each dispatched group was and whether more work
+        was already queued behind it. Worker-thread only; ``window_s`` is
+        read lock-free elsewhere (a float store is atomic under the GIL)."""
+        if not self.adaptive:
+            return
+        if backlog or group_size >= self._high_water:
+            grown = max(self.window_s * 2.0, self.max_window_s / 32.0)
+            self.window_s = min(self.max_window_s, grown)
+        elif group_size <= self._low_water:
+            shrunk = self.window_s / 2.0
+            if shrunk < self.max_window_s / 64.0:
+                shrunk = self.min_window_s
+            self.window_s = max(self.min_window_s, shrunk)
 
     def _dispatch(self, key, reqs: list) -> None:
         try:

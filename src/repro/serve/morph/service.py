@@ -148,6 +148,13 @@ class ServiceConfig:
     buckets: tuple[tuple[int, int], ...] = DEFAULT_BUCKETS
     max_batch: int = 64
     window_ms: float = 2.0
+    # Load-aware deadline window (ROADMAP item): window_ms becomes the MAX;
+    # the effective window shrinks toward min_window_ms when dispatches
+    # drain below the batcher's low-water mark and grows back toward
+    # window_ms under sustained pressure. stats()["effective_window_ms"]
+    # reports the current value.
+    adaptive_window: bool = True
+    min_window_ms: float = 0.0
     tile_interior: tuple[int, int] = (512, 512)
     max_tiles_per_launch: int = 16
     backend: str = "auto"  # "kernel" (fused Pallas) | "jnp" | "auto"
@@ -193,6 +200,8 @@ class MorphService:
             self._execute_group,
             max_batch=self.config.max_batch,
             window_s=self.config.window_ms / 1e3,
+            adaptive=self.config.adaptive_window,
+            min_window_s=self.config.min_window_ms / 1e3,
         )
 
     # ------------------------------------------------------------ submission
@@ -224,8 +233,10 @@ class MorphService:
         """Morphology-expression request (``repro.morph``): any graph over
         ``Var("x")`` — including ``BoundedIter`` reconstruction chains — is
         compiled into a plan and served; equal expressions share one cached
-        executable."""
-        return self.submit_plan(img, to_plan(expr, name=name))
+        executable. Plan compilation honors the service's policy (notably
+        ``opt_level`` — a ``DispatchPolicy(opt_level=0)`` service really
+        serves the raw graph)."""
+        return self.submit_plan(img, to_plan(expr, name=name, policy=self.policy))
 
     def run(self, img, op: str = "erode", se=(3, 3)):
         return self.submit(img, op, se).result()
@@ -317,6 +328,9 @@ class MorphService:
         snap["cache"] = self.cache.snapshot()
         snap["backend"] = self.backend
         snap["interpret"] = self.interpret
+        snap["window_ms"] = self.config.window_ms
+        snap["effective_window_ms"] = self._batcher.window_s * 1e3
+        snap["adaptive_window"] = self.config.adaptive_window
         return snap
 
     def flush(self, timeout: float | None = None) -> bool:

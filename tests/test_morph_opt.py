@@ -1,0 +1,438 @@
+"""IR optimizer: rewrite-pass semantics, cost model, calibration memoization,
+and the adaptive batching window.
+
+Load-bearing contracts (DESIGN.md §9):
+
+* **equivalence** — ``optimize()`` output is bit-identical to the raw graph
+  through ``lower_xla``, ``lower_kernel`` and served (masked + cropped)
+  plans, for random expression chains;
+* **halo monotonicity** — the optimized graph's per-axis halo never exceeds
+  the raw graph's;
+* the analytic cost model reproduces the historical scalar-threshold
+  dispatch exactly, and never decomposes (so behavior only changes once a
+  measured table is fit);
+* refcount guards: folding/fusing never un-shares a subgraph another
+  output still reads;
+* ``DispatchPolicy.calibrated()`` is memoized on file mtime;
+* the adaptive window shrinks under light load and grows under pressure.
+"""
+import dataclasses
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DispatchPolicy
+from repro.core import dispatch as dispatch_mod
+from repro.morph import (
+    Dilate,
+    Erode,
+    Gradient,
+    Sub,
+    X,
+    halo,
+    lower_kernel,
+    lower_xla,
+    masking_requirements,
+    optimize,
+    prim_count,
+    to_plan,
+)
+from repro.morph.opt import CostModel, cost, cost_model_for
+from repro.morph.opt.cost import feature, fit_affine
+from repro.serve.morph import MorphService, ServiceConfig, build_executor
+from repro.serve.morph.batcher import MicroBatcher
+from repro.serve.morph.buckets import valid_rect
+
+RNG = np.random.default_rng(7)
+
+RAW = dataclasses.replace(DispatchPolicy.calibrated(), opt_level=0)
+OPT = DispatchPolicy.calibrated()
+
+
+def rand(shape, dtype=np.uint8):
+    return RNG.integers(0, 256, shape, dtype=dtype)
+
+
+def random_chain(rng, depth=None):
+    """A random single-input expression chain (the property-test subject)."""
+    ops = ("erode", "dilate", "opening", "closing", "gradient", "tophat")
+    ses = ((3, 3), (5, 3), (3, 7), (5, 5), (1, 5))
+    e = X
+    for _ in range(depth if depth is not None else rng.integers(1, 4)):
+        op = ops[rng.integers(0, len(ops))]
+        e = getattr(e, op)(ses[rng.integers(0, len(ses))])
+    return e
+
+
+# ------------------------------------------------------------- rewrite passes
+def test_fold_merges_same_op_chains():
+    folded = optimize(X.erode((3, 3)).erode((5, 3)).erode((3, 5)))
+    assert isinstance(folded, Erode)
+    assert folded.se.pair == (9, 9)  # wings add: 1+2+1 and 1+1+2
+    d = optimize(X.dilate((3, 3)).dilate((3, 3)))
+    assert isinstance(d, Dilate) and d.se.pair == (5, 5)
+    # mixed ops never fold
+    assert prim_count(optimize(X.opening((3, 3)))) == 2
+
+
+def test_fold_respects_shared_consumers():
+    inner = X.erode((3, 3))
+    outs = {"small": inner, "big": inner.erode((5, 5))}
+    opt = optimize(outs)
+    # folding "big" into one 7x7 erode would recompute what "small" needs;
+    # the refcount guard must keep the shared 3x3 pass shared
+    assert isinstance(opt["big"], Erode) and opt["big"].se.pair == (5, 5)
+    assert opt["big"].child is opt["small"]
+
+
+def test_cse_shares_structural_duplicates():
+    se = (5, 5)
+    outs = {"open": X.opening(se), "tophat": X.tophat(se), "grad": X.gradient(se)}
+    assert prim_count(outs) == 6  # raw: each output rebuilt its own chain
+    opt = optimize(outs)
+    assert prim_count(opt) == 3  # one erode, opening's dilate, gradient's
+    assert opt["tophat"].b is opt["open"]  # tophat reuses the opening
+
+
+def test_gradient_canonicalizes_when_unshared():
+    g = optimize(X.gradient((3, 3)))
+    assert isinstance(g, Gradient) and g.se.pair == (3, 3)
+    # ... but not when a branch feeds another output (fusing would un-share)
+    outs = optimize({"g": X.gradient((3, 3)), "d": X.dilate((3, 3))})
+    assert isinstance(outs["g"], Sub)
+    assert outs["g"].a is outs["d"]
+
+
+def test_dead_output_elimination():
+    outs = {"a": X.erode((3, 3)), "b": X.opening((3, 3))}
+    kept = optimize(outs, keep=["b"])
+    assert list(kept) == ["b"]
+    with pytest.raises(KeyError):
+        optimize(outs, keep=["nope"])
+    with pytest.raises(ValueError):
+        optimize(X.erode((3, 3)), keep=["out"])
+    plan = to_plan(outs, keep=["a"])
+    assert plan.output_names() == ("a",)
+    assert plan.halo() == (1, 1)  # the opening's 2-wing halo died with "b"
+
+
+def test_opt_level_zero_is_identity():
+    e = X.erode((3, 3)).erode((3, 3))
+    assert optimize(e, level=0) is e
+
+
+def test_halo_never_grows():
+    rng = np.random.default_rng(3)
+    for _ in range(60):
+        e = random_chain(rng)
+        raw_halo = halo(e)
+        opt_halo = halo(optimize(e))
+        assert opt_halo[0] <= raw_halo[0] and opt_halo[1] <= raw_halo[1]
+        # the current passes are halo-exact (fold/decompose preserve wings)
+        assert opt_halo == raw_halo
+
+
+def test_gradient_node_analyses():
+    g = Gradient(X, (5, 3))
+    assert halo(g) == (2, 1)
+    reqs = masking_requirements(g)
+    assert ("max", (5, 3)) in reqs and ("min", (5, 3)) in reqs
+
+
+# ------------------------------------------------- equivalence (bit-exactness)
+def test_optimized_lowerings_bit_exact_random_chains():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rand((32, 40)))
+    for _ in range(10):
+        e = random_chain(rng)
+        raw = np.asarray(lower_xla(e, policy=RAW)(x))
+        opt = np.asarray(lower_xla(e, policy=OPT)(x))
+        assert np.array_equal(raw, opt)
+
+
+def test_optimized_kernel_lowering_bit_exact():
+    x = jnp.asarray(rand((24, 40)))
+    for e in (
+        X.gradient((3, 3)),
+        X.erode((3, 3)).erode((3, 3)),
+        {"open": X.opening((3, 3)), "tophat": X.tophat((3, 3))},
+    ):
+        raw = lower_kernel(e, policy=RAW, interpret=True)(x)
+        opt = lower_kernel(e, policy=OPT, interpret=True)(x)
+        if isinstance(raw, dict):
+            for k in raw:
+                assert np.array_equal(np.asarray(raw[k]), np.asarray(opt[k]))
+        else:
+            assert np.array_equal(np.asarray(raw), np.asarray(opt))
+
+
+def test_optimized_served_plan_bit_exact_with_masking():
+    """Bucket-padded + per-node masked execution of an optimized plan (incl.
+    the expanded Gradient node) matches the raw graph after cropping."""
+    img = rand((30, 40))
+    batch = np.zeros((1, 64, 64), dtype=img.dtype)
+    batch[0, :30, :40] = img
+    rects = np.asarray([valid_rect(30, 40)], dtype=np.int32)
+    # distinct SEs keep the gradient's erosion unshared, so it canonicalizes
+    outs = {"grad": X.gradient((3, 3)), "feat": X.tophat((5, 5))}
+    raw_plan = to_plan(outs, "raw", policy=RAW)
+    opt_plan = to_plan(outs, "opt", policy=OPT)
+    assert any(isinstance(e, Gradient) for _, e in opt_plan.outputs)
+    a = build_executor(raw_plan, policy=RAW)(jnp.asarray(batch), jnp.asarray(rects))
+    b = build_executor(opt_plan, policy=OPT)(jnp.asarray(batch), jnp.asarray(rects))
+    for k in outs:
+        assert np.array_equal(
+            np.asarray(a[k])[0, :30, :40], np.asarray(b[k])[0, :30, :40]
+        )
+
+
+def test_decomposition_schedule_is_bit_exact():
+    """A synthetic measured model with a convex vHGW curve (the regime where
+    iterated small passes beat one large one) decomposes a large SE; the
+    iterated chain must be bit-identical and halo-preserving."""
+    entries = {
+        ("major", "linear_tree", "uint8"): (1.0, 10.0),
+        ("major", "vhgw", "uint8"): (1.0, 0.5),
+        ("minor", "linear_tree", "uint8"): (1.0, 10.0),
+        ("minor", "vhgw", "uint8"): (1.0, 0.5),
+    }
+    model = CostModel(entries=entries, crossovers={}, source="measured")
+    e = X.erode((9, 9))
+    opt = optimize(e, level=2, cost_model=model)
+    assert opt != e  # it actually decomposed
+    assert halo(opt) == halo(e) == (4, 4)
+    assert prim_count(opt) > 1
+    x = jnp.asarray(rand((32, 32)))
+    assert np.array_equal(
+        np.asarray(lower_xla(e, policy=RAW)(x)),
+        np.asarray(lower_xla(opt, policy=RAW)(x)),
+    )
+
+
+# ------------------------------------------------------------------ cost model
+def test_analytic_model_reproduces_thresholds():
+    pol = DispatchPolicy(w0_minor=7, w0_major=11, w0_fused=5)
+    m = CostModel.analytic(pol)
+    assert m.best_method("major", 11, small="linear_tree") == "linear_tree"
+    assert m.best_method("major", 13, small="linear_tree") == "vhgw"
+    assert m.best_method("minor", 7, small="linear_tree") == "linear_tree"
+    assert m.best_method("minor", 9, small="linear_tree") == "vhgw"
+    assert m.best_method("fused", 5, small="linear") == "linear"
+    assert m.best_method("fused", 7, small="linear") == "vhgw"
+    assert m.crossover("major", small="linear_tree") == 13
+    # zero per-pass overhead: k small passes never beat one large pass
+    assert m.decompose((31, 31)) is None
+    assert m.fused_wins((9, 9))
+
+
+def test_fit_affine_recovers_coefficients():
+    c0, c1 = fit_affine([(w, 3.0 + 0.5 * w) for w in (3, 5, 9, 15)])
+    assert abs(c0 - 3.0) < 1e-9 and abs(c1 - 0.5) < 1e-9
+    c0, c1 = fit_affine([(1.0, 4.0), (1.0, 6.0)])  # degenerate: constant
+    assert c0 == 5.0 and c1 == 0.0
+    assert feature("linear", 9) == 9.0
+    assert feature("linear_tree", 9) == 4.0  # ceil(log2 9)
+    assert feature("vhgw", 9) == 81.0  # quadratic: captures measured bend
+    assert feature("vhgw", 1) == 0.0
+
+
+def test_decompose_schedule_wings_sum():
+    entries = {
+        ("major", "linear_tree", "uint8"): (1.0, 10.0),
+        ("major", "vhgw", "uint8"): (1.0, 0.5),
+        ("fused", "linear", "uint8"): (1.0, 5.0),
+        ("fused", "vhgw", "uint8"): (1.0, 0.5),
+    }
+    m = CostModel(entries=entries, crossovers={}, source="measured")
+    sched = m.decompose((17, 9), kinds=("major", "fused"))
+    assert sched is not None
+    wings_h = sum((h - 1) // 2 for h, _ in sched)
+    wings_w = sum((w - 1) // 2 for _, w in sched)
+    assert (wings_h, wings_w) == (8, 4)
+
+
+def test_fused_wins_uses_op2d_fits():
+    m = CostModel(
+        entries={},
+        crossovers={},
+        source="measured",
+        op2d={
+            ("fused", "uint8"): (10.0, 1.0),
+            ("two_pass", "uint8"): (1.0, 0.1),
+        },
+    )
+    assert not m.fused_wins((3, 3))  # two-pass measured cheaper everywhere
+
+
+def test_cost_table_roundtrip_and_policy_matching(tmp_path, monkeypatch):
+    path = str(tmp_path / "cost_table.json")
+    monkeypatch.setattr(cost, "COST_TABLE_FILE", path)
+    entries = {
+        ("major", "linear_tree", "uint8"): (1.0, 0.25),
+        ("major", "vhgw", "uint8"): (4.0, 0.0),
+    }
+    crossovers = {"w0_major": 21, "w0_minor": 15, "w0_fused": 255,
+                  "small_method": "linear_tree"}
+    cost.save_measured(entries, crossovers, path=path)
+    m = cost.load_measured(path=path)
+    assert m is not None and m.source == "measured"
+    assert m.entries[("major", "linear_tree", "uint8")] == (1.0, 0.25)
+    matching = DispatchPolicy(w0_major=21, w0_minor=15, w0_fused=255)
+    assert m.matches(matching)
+    hand_tuned = DispatchPolicy(w0_fused=5)
+    assert not m.matches(hand_tuned)
+    # a hand-tuned policy falls back to its own analytic model
+    assert cost_model_for(hand_tuned).source == "analytic"
+    # a second device's fit must not clobber the first
+    cost.save_measured(entries, crossovers, path=path, device="other-dev")
+    with open(path) as f:
+        table = json.load(f)
+    assert len(table["devices"]) == 2
+
+
+# --------------------------------------------------- calibration memoization
+def test_calibrated_policy_memoized_on_mtime(tmp_path, monkeypatch):
+    calib = tmp_path / "calibration.json"
+    calib.write_text(json.dumps({"w0_major": 41, "w0_minor": 21}))
+    monkeypatch.setattr(dispatch_mod, "_CALIBRATION_FILE", str(calib))
+    monkeypatch.setattr(cost, "COST_TABLE_FILE", str(tmp_path / "absent.json"))
+    dispatch_mod._CALIBRATED_CACHE.clear()
+    p1 = DispatchPolicy.calibrated()
+    assert (p1.w0_major, p1.w0_minor) == (41, 21)
+    assert DispatchPolicy.calibrated() is p1  # memo hit: same object
+    # rewrite with a strictly newer mtime -> cache invalidates
+    calib.write_text(json.dumps({"w0_major": 43, "w0_minor": 21}))
+    st = os.stat(calib)
+    os.utime(calib, ns=(st.st_atime_ns, st.st_mtime_ns + 1_000_000))
+    p2 = DispatchPolicy.calibrated()
+    assert p2.w0_major == 43
+    dispatch_mod._CALIBRATED_CACHE.clear()
+
+
+def test_calibrated_adopts_cost_table_crossovers(tmp_path, monkeypatch):
+    calib = tmp_path / "calibration.json"
+    calib.write_text(json.dumps({"w0_major": 41, "w0_minor": 21}))
+    table = tmp_path / "cost_table.json"
+    monkeypatch.setattr(dispatch_mod, "_CALIBRATION_FILE", str(calib))
+    monkeypatch.setattr(cost, "COST_TABLE_FILE", str(table))
+    cost.save_measured(
+        {("major", "vhgw", "uint8"): (1.0, 0.0)},
+        {"w0_major": 99, "w0_minor": 33, "w0_fused": 111,
+         "small_method": "linear_tree"},
+        path=str(table),
+    )
+    dispatch_mod._CALIBRATED_CACHE.clear()
+    p = DispatchPolicy.calibrated()
+    # the measured table supersedes the scalar file
+    assert (p.w0_major, p.w0_minor, p.w0_fused) == (99, 33, 111)
+    # and the measured model applies to the calibrated policy
+    assert cost_model_for(p).source == "measured"
+    dispatch_mod._CALIBRATED_CACHE.clear()
+
+
+# ------------------------------------------------------------ adaptive window
+def test_adaptive_window_shrinks_and_grows():
+    b = MicroBatcher(lambda key, reqs: None, max_batch=16, window_s=0.02,
+                     adaptive=True)
+    try:
+        assert b.window_s == b.max_window_s == 0.02
+        b._adapt(1)  # light load: singleton deadline expiry
+        assert b.window_s < 0.02
+        for _ in range(20):
+            b._adapt(1)
+        assert b.window_s == b.min_window_s  # drained: converges to min
+        # zero is not absorbing: at a zero-width window every group is size
+        # 1, so queued backlog (not group size) must reopen the window
+        b._adapt(1, backlog=True)
+        assert b.window_s > b.min_window_s
+        for _ in range(20):
+            b._adapt(1)
+        b._adapt(16)  # full batch: pressure
+        assert b.window_s > b.min_window_s
+        for _ in range(20):
+            b._adapt(16)
+        assert b.window_s == b.max_window_s
+        mid = b.window_s
+        b._adapt(4)  # between the water marks: hold
+        assert b.window_s == mid
+    finally:
+        b.close()
+
+
+def test_adaptive_window_static_when_disabled():
+    b = MicroBatcher(lambda key, reqs: None, max_batch=16, window_s=0.02)
+    try:
+        b._adapt(1)
+        assert b.window_s == 0.02
+    finally:
+        b.close()
+
+
+def test_service_exposes_effective_window():
+    cfg = ServiceConfig(buckets=((64, 128),), max_batch=8, window_ms=50.0,
+                        adaptive_window=True)
+    with MorphService(cfg) as svc:
+        for _ in range(4):  # sequential singletons: light load
+            svc.run(rand((16, 24)), op="erode", se=(3, 3))
+        svc.flush(timeout=5.0)
+        deadline = time.monotonic() + 5.0
+        while (svc.stats()["effective_window_ms"] >= 50.0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        stats = svc.stats()
+    assert stats["window_ms"] == 50.0
+    assert stats["adaptive_window"] is True
+    assert stats["effective_window_ms"] < 50.0  # shrank under light load
+
+
+# ----------------------------------------------------- hypothesis properties
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # minimal envs lack it; the rng loops above still run
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    _ops = st.sampled_from(
+        ["erode", "dilate", "opening", "closing", "gradient", "tophat"])
+    _ses = st.sampled_from([(3, 3), (5, 3), (3, 7), (1, 5)])
+    _chains = st.lists(st.tuples(_ops, _ses), min_size=1, max_size=4)
+
+    def _build(chain):
+        e = X
+        for op, se in chain:
+            e = getattr(e, op)(se)
+        return e
+
+    @settings(max_examples=25, deadline=None)
+    @given(chain=_chains, seed=st.integers(0, 2**31))
+    def test_property_optimize_bit_exact_xla(chain, seed):
+        e = _build(chain)
+        x = jnp.asarray(
+            np.random.default_rng(seed).integers(0, 256, (20, 28), np.uint8))
+        raw = np.asarray(lower_xla(e, policy=RAW)(x))
+        opt = np.asarray(lower_xla(e, policy=OPT)(x))
+        assert np.array_equal(raw, opt)
+
+    @settings(max_examples=8, deadline=None)
+    @given(chain=_chains, seed=st.integers(0, 2**31))
+    def test_property_optimize_bit_exact_kernel(chain, seed):
+        e = _build(chain)
+        x = jnp.asarray(
+            np.random.default_rng(seed).integers(0, 256, (16, 24), np.uint8))
+        raw = np.asarray(lower_kernel(e, policy=RAW, interpret=True)(x))
+        opt = np.asarray(lower_kernel(e, policy=OPT, interpret=True)(x))
+        assert np.array_equal(raw, opt)
+
+    @settings(max_examples=50, deadline=None)
+    @given(chain=_chains)
+    def test_property_halo_monotone(chain):
+        e = _build(chain)
+        rh, oh = halo(e), halo(optimize(e))
+        assert oh[0] <= rh[0] and oh[1] <= rh[1]
