@@ -121,6 +121,36 @@ def opt_table(path: str) -> str:
     return "\n".join(out)
 
 
+def shard_table(path: str) -> str:
+    with open(path) as f:
+        d = json.load(f)
+    shape = "x".join(str(s) for s in d["shape"])
+    out = [f"### Sharded morphology ({shape}, {d['devices']} devices, "
+           f"{d['device_kind']})", "",
+           "| case | single-device ms | " +
+           " | ".join(f"{p['shards']} shards"
+                      for p in d["scaling"][0]["per_shards"]) +
+           " | max speedup |",
+           "|---|---|" + "---|" * (len(d["scaling"][0]["per_shards"]) + 1)]
+    for r in d["scaling"]:
+        cells = " | ".join(
+            f"{p['time_s']*1e3:.1f} ({p['speedup']}x)" for p in r["per_shards"]
+        )
+        out.append(f"| {r['case']} | {r['single_device_s']*1e3:.1f} "
+                   f"| {cells} | **{r['max_shards_speedup']}x** |")
+    if d.get("ab"):
+        out += ["", "halo-exchange vs reshard (erode, max shards; ratio > 1 "
+                "means exchange wins):", "",
+                "| SE rows | wing | shard interior | exchange ms | "
+                "reshard ms | reshard/exchange |", "|---|---|---|---|---|---|"]
+        for r in d["ab"]:
+            out.append(
+                f"| {r['se_h']} | {r['wing']} | {r['shard_interior']} "
+                f"| {r['exchange_s']*1e3:.1f} | {r['reshard_s']*1e3:.1f} "
+                f"| **{r['exchange_vs_reshard']}x** |")
+    return "\n".join(out)
+
+
 def roofline_table(path: str) -> str:
     with open(path) as f:
         rows = json.load(f)
@@ -171,6 +201,11 @@ def main():
         parts.append(opt_table(f"{base}/BENCH_opt.json"))
     except FileNotFoundError:
         parts.append("optimizer results missing (run benchmarks.bench_passes --opt)")
+    try:
+        parts.append(shard_table(f"{base}/BENCH_shard.json"))
+    except FileNotFoundError:
+        parts.append("sharding results missing (run benchmarks.bench_shard "
+                     "with XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     try:
         parts.append(roofline_table(f"{base}/roofline.json"))
     except FileNotFoundError:

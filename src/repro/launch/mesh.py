@@ -1,8 +1,14 @@
-"""Production mesh construction (DESIGN.md §5).
+"""Production mesh construction for the LM stack (DESIGN.md §5).
 
 A TPU v5e pod is 16x16 = 256 chips; the multi-pod config stacks 2 pods on
 a leading "pod" (DCN) axis. Defined as functions so importing this module
 never touches jax device state (device count is locked at first init).
+
+These meshes partition *parameter* axes ("data"/"model"). The morphology
+workload partitions the *image plane* instead — that mesh family lives in
+``repro.shard.mesh`` (``image_mesh``: 1-D row strips / 2-D row x col
+grids), which superseded the generic host-mesh scaffolding here for
+everything morphology-shaped (DESIGN.md §10).
 """
 from __future__ import annotations
 

@@ -61,12 +61,24 @@ def evaluate(
     pre_prim=None,
     gradient_prim=None,
     memo: dict | None = None,
+    stable_reduce=None,
+    iter_report=None,
 ):
     """Evaluate ``expr`` with inputs ``env`` (name -> array).
 
     Pass the same ``memo`` dict across several ``evaluate`` calls to share
     work between a plan's named outputs (later outputs typically extend the
     chain that produced earlier ones).
+
+    ``stable_reduce`` post-processes every ``BoundedIter`` "changed" flag
+    (a bool scalar). Mesh-sharded lowerings must make convergence *global*
+    (``lax.psum`` over the mesh axes): a shard exiting its loop early while
+    neighbors still iterate would desynchronize the collectives inside the
+    body. ``iter_report(used, budget)`` is called once per top-level
+    ``BoundedIter`` with the traced iteration count actually executed and
+    the static budget — how serving surfaces convergence depth in
+    ``stats()``. Loops nested inside another loop's body do not report
+    (their count is a tracer of the outer loop's scope).
     """
     memo = {} if memo is None else memo
 
@@ -137,26 +149,64 @@ def evaluate(
         def step(cur):
             sub_env = dict(env)
             sub_env[node.var] = cur
-            # fresh memo: the loop body re-traces per lax iteration variable
+            # fresh memo: the loop body re-traces per lax iteration variable.
+            # iter_report stays top-level only (a nested loop's count would
+            # be a tracer of this body's scope); stable_reduce propagates —
+            # nested sharded loops need global convergence too.
             return evaluate(
                 node.body, sub_env,
                 prim=prim, pre_prim=pre_prim, gradient_prim=gradient_prim,
+                stable_reduce=stable_reduce,
             )
 
+        def changed(prev, cur):
+            c = jnp.any(prev != cur)
+            return stable_reduce(c) if stable_reduce is not None else c
+
         if not node.until_stable:
-            return jax.lax.fori_loop(0, node.iters, lambda _, cur: step(cur), init)
+            # Fixed-trace serving form: still a fori_loop over the full
+            # budget (the executable's shape never depends on the data), but
+            # the carry holds a convergence flag and the body is predicated
+            # on it — a converged reconstruction stops paying for its
+            # remaining budget. Bit-exact with the unpredicated loop: `done`
+            # only sets once step(cur) == cur, and a deterministic step is
+            # constant on its own fixpoint.
+            def body(_, state):
+                cur, done, used = state
+
+                def advance(st):
+                    c, _, u = st
+                    nxt = step(c)
+                    return nxt, jnp.logical_not(changed(c, nxt)), u + 1
+
+                return jax.lax.cond(done, lambda st: st, advance, state)
+
+            out, _, used = jax.lax.fori_loop(
+                0, node.iters, body,
+                (init, jnp.bool_(False), jnp.int32(0)),
+            )
+            if iter_report is not None:
+                iter_report(used, node.iters)
+            return out
 
         # until-stable: the exact loop shape core/derived.py reconstruction
         # has always used, so IR-lowered reconstruction is bit-identical.
         def cond(state):
             prev, cur, i = state
-            return jnp.logical_and(i < node.iters, jnp.any(prev != cur))
+            return jnp.logical_and(i < node.iters, changed(prev, cur))
 
         def body(state):
             _, cur, i = state
             return cur, step(cur), i + 1
 
-        _, out, _ = jax.lax.while_loop(cond, body, (init, step(init), jnp.int32(0)))
+        _, out, used = jax.lax.while_loop(
+            cond, body, (init, step(init), jnp.int32(0))
+        )
+        if iter_report is not None:
+            # the loop state is seeded with one step(init) application, so
+            # steps computed = loop trips + 1 and the cap is iters + 1 —
+            # the same convention analyze.halo uses for this form
+            iter_report(used + 1, node.iters + 1)
         return out
 
     return ev(expr)

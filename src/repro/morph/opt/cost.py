@@ -52,8 +52,11 @@ COST_TABLE_FILE = os.path.join(
     "cost_table.json",
 )
 
-AXIS_KINDS = ("major", "minor", "fused")
+AXIS_KINDS = ("major", "minor", "fused", "collective")
 _SMALL_METHODS = ("linear", "linear_paired", "linear_tree")
+# Methods under the "collective" axis kind (sharded execution, repro.shard):
+# affine in *elements moved*, fit by bench_shard --fit-collective.
+COLLECTIVE_METHODS = ("ppermute", "all_to_all")
 
 
 def feature(method: str, w: int) -> float:
@@ -75,7 +78,9 @@ def feature(method: str, w: int) -> float:
         return float(math.ceil(math.log2(w)))
     if method == "vhgw":
         return float(w) * float(w)
-    return float(w)  # linear / linear_paired accumulator ladders
+    # linear / linear_paired accumulator ladders (driver: window), and the
+    # collective methods (driver: elements moved — callers pass elems as w)
+    return float(w)
 
 
 def fit_affine(points) -> tuple[float, float]:
@@ -219,9 +224,16 @@ class CostModel:
         if self.source == "analytic":
             w0 = int(self.crossovers.get(f"w0_{kind}", 0))
             return small if w <= w0 else "vhgw"
-        if self.cost_1d(kind, small, w, dtype) <= self.cost_1d(kind, "vhgw", w, dtype):
-            return small
-        return "vhgw"
+        cs = self.cost_1d(kind, small, w, dtype)
+        cv = self.cost_1d(kind, "vhgw", w, dtype)
+        if math.isinf(cs) and math.isinf(cv):
+            # a measured table sparse in this axis kind (e.g. only the
+            # collective curves were fit, bench_shard --fit-collective):
+            # degrade to the recorded crossover thresholds — bit-for-bit
+            # the scalar branch, never an arbitrary inf-vs-inf tie
+            w0 = int(self.crossovers.get(f"w0_{kind}", 0))
+            return small if w <= w0 else "vhgw"
+        return small if cs <= cv else "vhgw"
 
     def crossover(self, kind: str, *, small: str = "linear_tree",
                   dtype: str = "uint8", sweep=None) -> int:
@@ -247,6 +259,51 @@ class CostModel:
             m = self.best_method(kind, w, dtype, small=s)
             total += self.cost_1d(kind, m, w, dtype)
         return total
+
+    def collective_cost(self, method: str, elems: int, dtype: str = "uint8"):
+        """Modeled µs for moving ``elems`` elements via ``method``
+        (``"ppermute"`` / ``"all_to_all"``), or ``None`` when this model has
+        no measured curve — collectives have no analytic reconstruction (the
+        scalar thresholds never described them), so absence means "fall back
+        to the byte-count heuristic", not "cost zero".
+        """
+        if method not in COLLECTIVE_METHODS:
+            raise ValueError(
+                f"collective method must be one of {COLLECTIVE_METHODS}, "
+                f"got {method!r}"
+            )
+        e = self._entry("collective", method, dtype)
+        if e is None:
+            return None
+        c0, c1 = e
+        return max(0.0, c0 + c1 * float(elems))
+
+    def exchange_wins(
+        self, wing: int, interior: int, row_elems: int, dtype: str = "uint8"
+    ) -> bool:
+        """Halo-exchange vs reshard for one sharded separable pass.
+
+        Exchange moves ``2 * wing`` rows total but issues ``2 * k`` ppermute
+        launches for ``k = ceil(wing / interior)`` hops (halo.exchange_halo's
+        multi-hop form), so each extra launch pays the intercept again;
+        resharding moves the whole slab through two ``all_to_all``s
+        (``2 * interior`` rows per shard). Measured collective curves decide
+        when both exist; otherwise the byte-count heuristic: exchange wins
+        unless the wing exceeds the shard interior — exactly the regime
+        (SE wider than a slab) where multi-hop exchange degenerates into an
+        all-gather anyway.
+        """
+        pc = self.collective_cost("ppermute", 2 * wing * row_elems, dtype)
+        launch = self.collective_cost("ppermute", 0, dtype)
+        ac = self.collective_cost("all_to_all", 2 * interior * row_elems, dtype)
+        if pc is None or ac is None:
+            return wing <= interior
+        k = max(1, -(-wing // max(1, interior)))
+        # collective_cost already includes one intercept; exchange issues
+        # 2k launches (one pair per hop), all_to_all issues two
+        pc = pc + (2 * k - 1) * launch
+        ac = ac + self.collective_cost("all_to_all", 0, dtype)
+        return pc <= ac
 
     def fused_wins(self, se, dtype: str = "uint8", *, gradient: bool = False) -> bool:
         """Per-node fused-megakernel vs two-pass+transpose decision.

@@ -169,6 +169,7 @@ def build_executor(
     backend: Backend = "jnp",
     policy: DispatchPolicy | None = None,
     interpret: bool | None = None,
+    with_aux: bool = False,
 ):
     """Jitted ``(x (B,H,W), rect (B,4)) -> {name: (B,H,W) array}`` executor.
 
@@ -181,6 +182,12 @@ def build_executor(
     primitive's input has everything outside the valid rect overwritten with
     that op's neutral element, the graph-derived generalization of the old
     per-step masking loop (and of its special-cased dual-neutral gradient).
+
+    ``with_aux=True`` returns ``(outs, aux)`` instead, where ``aux`` carries
+    convergence telemetry summed over the plan's ``BoundedIter`` nodes
+    (``iters_used`` actually executed vs the static ``iters_budget``) — the
+    service reads it to expose convergence depth in ``stats()``. Plans with
+    no bounded iteration report both as 0.
     """
     backend = check_backend(backend)
     policy = policy or DispatchPolicy.calibrated()
@@ -197,11 +204,27 @@ def build_executor(
         def pre(v, mop):
             return mask_outside(v, rect, mop.neutral(v.dtype))
 
+        reports: list = []
+
+        def report(used, budget):
+            reports.append((used, budget))
+
         memo: dict = {}
         outs = {
-            name: evaluate(e, {"x": x}, prim=prim, pre_prim=pre, memo=memo)
+            name: evaluate(
+                e, {"x": x}, prim=prim, pre_prim=pre, memo=memo,
+                iter_report=report if with_aux else None,
+            )
             for name, e in plan.outputs
         }
+        if with_aux:
+            aux = {
+                "iters_used": sum(
+                    (u for u, _ in reports), jnp.int32(0)
+                ),
+                "iters_budget": jnp.int32(sum(b for _, b in reports)),
+            }
+            return outs, aux
         return outs
 
     return jax.jit(run)

@@ -19,11 +19,14 @@ powers of two so B-variance cannot silently multiply compiles.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
 from concurrent.futures import Future
+from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -105,6 +108,13 @@ class ServiceStats:
         self.requests = 0
         self.batches = 0
         self.tiled_requests = 0
+        # convergence telemetry from BoundedIter plans (reconstruction):
+        # budget is the fixed-trace iteration cap, used what actually ran
+        # before the predicated scan converged (interp.py) — the gap is
+        # work the convergence-aware serving satellite reclaims.
+        self.bounded_execs = 0
+        self.iters_used_total = 0
+        self.iters_budget_total = 0
 
     def record_batch(self, latencies_s) -> None:
         now = time.monotonic()
@@ -125,16 +135,35 @@ class ServiceStats:
             self._latencies.extend(latencies_s)
             self._done_ts.extend([now] * len(latencies_s))
 
+    def record_bounded(self, used: int, budget: int) -> None:
+        with self._lock:
+            self.bounded_execs += 1
+            self.iters_used_total += int(used)
+            self.iters_budget_total += int(budget)
+
     def snapshot(self, max_batch: int) -> dict:
         with self._lock:
             lat = np.asarray(self._latencies, dtype=np.float64)
             ts = list(self._done_ts)
             sizes = np.asarray(self._batch_sizes, dtype=np.float64)
+            # copy under the lock: used/budget must come from one
+            # record_bounded or the derived ratio can tear
+            bounded_execs = self.bounded_execs
+            iters_used = self.iters_used_total
+            iters_budget = self.iters_budget_total
         span = (ts[-1] - ts[0]) if len(ts) > 1 else 0.0
         return {
             "requests": self.requests,
             "batches": self.batches,
             "tiled_requests": self.tiled_requests,
+            "bounded_iter": {
+                "executions": bounded_execs,
+                "iters_used": iters_used,
+                "iters_budget": iters_budget,
+                "saved_frac": (
+                    1.0 - iters_used / iters_budget if iters_budget else 0.0
+                ),
+            },
             "img_per_s": (len(ts) - 1) / span if span > 0 else 0.0,
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
@@ -162,6 +191,10 @@ class ServiceConfig:
     interpret: bool | None = None
     cache_size: int = 128
     stats_window: int = 4096
+    # Pin this service's dispatches to one jax device — how the sharded
+    # router (repro.shard.router) runs each shard's batcher under its own
+    # mesh slot. None = the process default device.
+    device: Any = None
 
 
 @dataclasses.dataclass
@@ -270,14 +303,26 @@ class MorphService:
                 backend=self.backend,
                 policy=self.policy,
                 interpret=self.interpret,
+                with_aux=True,
             ),
         )
 
+    def _device_scope(self):
+        if self.config.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.config.device)
+
     def _execute_group(self, key, reqs: list) -> None:
-        if key[0] == "tiled":
-            self._execute_tiled(reqs)
-        else:
-            self._execute_bucketed(key, reqs)
+        with self._device_scope():
+            if key[0] == "tiled":
+                self._execute_tiled(reqs)
+            else:
+                self._execute_bucketed(key, reqs)
+
+    def _record_aux(self, aux: dict) -> None:
+        budget = int(aux["iters_budget"])
+        if budget:
+            self._stats.record_bounded(int(aux["iters_used"]), budget)
 
     def _execute_bucketed(self, key, reqs: list) -> None:
         _, plan, bucket, _ = key
@@ -289,17 +334,20 @@ class MorphService:
             batch[i, :h, :w] = r.img  # rows past len(reqs) keep an empty rect
             rects[i] = valid_rect(h, w)
         execute = self._executor_for(plan, bucket, batch.dtype, bb)
-        outs = {k: np.asarray(v) for k, v in
-                execute(jnp.asarray(batch), jnp.asarray(rects)).items()}
+        outs, aux = execute(jnp.asarray(batch), jnp.asarray(rects))
+        outs = {k: np.asarray(v) for k, v in outs.items()}
+        self._record_aux(aux)
         names = plan.output_names()
+        # record stats before resolving futures: a caller returning from
+        # result() must observe its own request in stats()
+        now = time.monotonic()
+        self._stats.record_batch([now - r.t_submit for r in reqs])
         for i, r in enumerate(reqs):
             h, w = r.img.shape
             cropped = {
                 name: crop_from_bucket(outs[name][i], h, w) for name in names
             }
             r.future.set_result(cropped["out"] if names == ("out",) else cropped)
-        now = time.monotonic()
-        self._stats.record_batch([now - r.t_submit for r in reqs])
 
     def _execute_tiled(self, reqs: list) -> None:
         for r in reqs:
@@ -307,9 +355,13 @@ class MorphService:
             ext = (self.config.tile_interior[0] + 2 * gh,
                    self.config.tile_interior[1] + 2 * gw)
 
+            aux_chunks: list = []
+
             def execute(tiles, rects):
                 fn = self._executor_for(r.plan, ext, tiles.dtype, tiles.shape[0])
-                return fn(jnp.asarray(tiles), jnp.asarray(rects))
+                outs, aux = fn(jnp.asarray(tiles), jnp.asarray(rects))
+                aux_chunks.append(aux)  # record after all chunks dispatch:
+                return outs             # int(aux) here would sync per launch
 
             outs = run_tiled(
                 r.img,
@@ -319,8 +371,12 @@ class MorphService:
                 launch_batch=self.config.max_tiles_per_launch,
             )
             names = r.plan.output_names()
-            r.future.set_result(outs["out"] if names == ("out",) else outs)
+            for aux in aux_chunks:
+                self._record_aux(aux)
+            # record before resolving: a caller returning from result()
+            # must observe its own request in stats()
             self._stats.record_tiled([time.monotonic() - r.t_submit])
+            r.future.set_result(outs["out"] if names == ("out",) else outs)
 
     # -------------------------------------------------------------- lifecycle
     def stats(self) -> dict:

@@ -1,0 +1,45 @@
+"""Mesh-partitioned morphology: device-side halo exchange + sharded serving.
+
+The paper's separable erode/dilate passes parallelize by splitting the image
+plane into independent strips whose only coupling is a halo of ``wing``
+pixels (the same structure Bailey et al. exploit for parallel geodesic
+transforms on multi-core CPUs). This package makes that structure a
+first-class execution mode:
+
+* :mod:`repro.shard.mesh`  — 1-D / 2-D device meshes over the image plane;
+* :mod:`repro.shard.halo`  — device-side halo exchange (``shard_map`` +
+  ``lax.ppermute``; neutral fill at global boundaries, multi-hop when an SE
+  wing exceeds a shard's interior);
+* :mod:`repro.shard.lower` — ``to_sharded(expr, mesh)``: the fourth lowering
+  of the morphology IR, next to ``lower_xla`` / ``lower_kernel`` /
+  ``to_plan``; per-pass halo-exchange-vs-reshard choice via the measured
+  cost model's ``collective`` axis kind;
+* :mod:`repro.shard.router` — :class:`ShardedMorphService`: shape buckets
+  routed to per-device ``MorphService`` shards, stats merged.
+
+Everything is bit-exact against the single-device ``lower_xla`` path
+(property-tested in tests/test_shard.py, including shapes not divisible by
+the shard count and SE wings wider than a shard's interior).
+"""
+from repro.shard.halo import exchange_halo
+from repro.shard.lower import ShardStrategy, to_sharded
+from repro.shard.mesh import (
+    COLS,
+    ROWS,
+    available_shards,
+    image_mesh,
+    mesh_axis_sizes,
+)
+from repro.shard.router import ShardedMorphService
+
+__all__ = [
+    "COLS",
+    "ROWS",
+    "ShardStrategy",
+    "ShardedMorphService",
+    "available_shards",
+    "exchange_halo",
+    "image_mesh",
+    "mesh_axis_sizes",
+    "to_sharded",
+]

@@ -1,0 +1,87 @@
+"""Device-side halo exchange for mesh-partitioned separable passes.
+
+A 1-D morphology pass of window ``2*wing + 1`` along a sharded axis needs
+``wing`` rows of each neighbor's slab — nothing else couples the shards.
+:func:`exchange_halo` runs *inside* ``shard_map`` and extends the local slab
+with exactly those rows via ``lax.ppermute`` pairs (one send up, one send
+down per hop), entirely device-resident — the sharded analog of the serving
+layer's host-side tile gather, with no host round trip.
+
+Boundary semantics: shards at the global edge fill their missing halo with
+the op's **neutral element**, which is bit-identical to the single-device
+kernels' virtual neutral border (``core/linear_pass.py`` / ``core/vhgw.py``
+pad with the same neutral). It is also equivalent to edge-replication for
+these ops: min/max are idempotent and the boundary row is already inside
+any window that overhangs the edge, so replicated copies can never change
+the reduction — neutral fill is simply the cheaper identical choice.
+
+Wings wider than a shard's interior take **multi-hop** exchange: with slab
+height ``R`` and ``k = ceil(wing / R)``, hop ``d`` fetches the slab of the
+shard ``d`` away (full slabs for ``d < k``, the trailing ``wing - (k-1)*R``
+rows for the farthest hop), so the extended slab is exact for any SE — the
+property the tiling layer already guarantees for oversized images.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _hop(x, d: int, axis: int, axis_name: str, size: int, *, up: bool):
+    """Slab received from the shard ``d`` positions before (``up``) / after
+    this one, or ``None`` when no shard can be that far away."""
+    if d >= size:
+        return None
+    if up:
+        perm = [(i, i + d) for i in range(size - d)]
+    else:
+        perm = [(i, i - d) for i in range(d, size)]
+    return lax.ppermute(x, axis_name, perm)
+
+
+def exchange_halo(
+    x,
+    wing: int,
+    *,
+    axis: int,
+    axis_name: str,
+    size: int,
+    neutral,
+):
+    """Extend a local slab with ``wing`` halo rows from mesh neighbors.
+
+    Call inside ``shard_map``. ``x`` is the local slab, ``axis`` the sharded
+    axis (typically -2 for rows, -1 for cols), ``size`` the static mesh axis
+    size, ``neutral`` the fill for halo regions beyond the global image
+    (the op's own neutral — see module docstring). Returns ``x`` grown by
+    ``wing`` on both sides of ``axis``; run the 1-D pass on the result and
+    slice ``[wing : wing + R]`` back out.
+    """
+    if wing <= 0 or size <= 1:
+        return x
+    axis = axis % x.ndim
+    r = x.shape[axis]
+    idx = lax.axis_index(axis_name)
+    k = -(-wing // r)  # hops needed to cover the wing
+    need = wing - (k - 1) * r  # rows taken from the farthest hop
+
+    def fill_like(block):
+        return jnp.full(block.shape, neutral, dtype=x.dtype)
+
+    above = []  # farthest neighbor first: global order i-k, ..., i-1
+    for d in range(k, 0, -1):
+        block = x if d < k else lax.slice_in_dim(x, r - need, r, axis=axis)
+        recv = _hop(block, d, axis, axis_name, size, up=True)
+        if recv is None:
+            above.append(fill_like(block))
+        else:
+            above.append(jnp.where(idx >= d, recv, fill_like(block)))
+    below = []  # nearest neighbor first: global order i+1, ..., i+k
+    for d in range(1, k + 1):
+        block = x if d < k else lax.slice_in_dim(x, 0, need, axis=axis)
+        recv = _hop(block, d, axis, axis_name, size, up=False)
+        if recv is None:
+            below.append(fill_like(block))
+        else:
+            below.append(jnp.where(idx <= size - 1 - d, recv, fill_like(block)))
+    return jnp.concatenate(above + [x] + below, axis=axis)

@@ -1,0 +1,149 @@
+"""ShardedMorphService: route shape buckets across per-device shards.
+
+The serving engine (PR 2) runs one ``MorphService`` per host; this router
+scales it across a device mesh. Each mesh device gets its own full
+``MorphService`` — batcher thread, bucket ladder, executable cache — pinned
+to that device (``ServiceConfig.device``), and requests route by a stable
+hash of ``(plan, bucket, dtype)``:
+
+* every (plan, bucket) group lands on exactly one shard, so micro-batching
+  coalesces exactly as on a single service (scattering a group would
+  fragment its batches and multiply compiles);
+* distinct groups spread across shards, so a diverse traffic mix keeps all
+  devices busy while each device holds only its own groups' executables —
+  the aggregate cache is N times the single-service VMEM/HBM budget, which
+  is the point of sharding the engine.
+
+Tiled (oversized) traffic routes the same way; each shard's device-side
+tile gather (serve/morph/tiling.py) keeps it off the host. For one giant
+image where *latency* matters more than engine throughput, use
+``repro.shard.to_sharded`` directly — that is mesh parallelism inside a
+single computation, not across the request stream.
+
+``stats()`` merges per-shard engines: counters and cache hits/misses/
+evictions sum, throughput adds, latency quantiles and the adaptive window
+take the worst shard (max), and the full per-shard list rides along.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax
+import numpy as np
+
+from repro.serve.morph.buckets import choose_bucket
+from repro.serve.morph.plans import Plan, get_plan, single_op_plan
+from repro.serve.morph.service import MorphService, ServiceConfig
+
+
+class ShardedMorphService:
+    """Mesh-sharded morphology serving. Use as a context manager:
+
+        with ShardedMorphService() as svc:          # one shard per device
+            fut = svc.submit(img, op="erode", se=(5, 5))
+            outs = svc.run_plan(img2, "document_cleanup")
+    """
+
+    def __init__(self, config: ServiceConfig | None = None, *,
+                 mesh=None, devices=None):
+        import dataclasses
+
+        if mesh is not None and devices is not None:
+            raise ValueError("pass mesh or devices, not both")
+        if mesh is not None:
+            devices = list(mesh.devices.flat)
+        elif devices is None:
+            devices = jax.devices()
+        if not devices:
+            raise ValueError("ShardedMorphService needs at least one device")
+        self.config = config or ServiceConfig()
+        self.devices = tuple(devices)
+        self.shards = tuple(
+            MorphService(dataclasses.replace(self.config, device=d))
+            for d in self.devices
+        )
+
+    # ------------------------------------------------------------- routing
+    def _route(self, plan: Plan, img: np.ndarray) -> MorphService:
+        """Stable bucket-affine routing (see module docstring)."""
+        bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
+        token = f"{plan.name}|{bucket}|{img.dtype.str}".encode()
+        return self.shards[zlib.crc32(token) % len(self.shards)]
+
+    # ---------------------------------------------------------- submission
+    def submit(self, img, op: str = "erode", se=(3, 3)):
+        return self.submit_plan(img, single_op_plan(op, se))
+
+    def submit_plan(self, img, plan: "str | Plan"):
+        plan = get_plan(plan)
+        img = np.asarray(img)
+        if img.ndim != 2:
+            raise ValueError("the service takes single (H, W) images; submit "
+                             "each image of a batch separately")
+        return self._route(plan, img).submit_plan(img, plan)
+
+    def submit_expr(self, img, expr, name: str | None = None):
+        from repro.morph.plan_compile import to_plan
+
+        policy = self.shards[0].policy
+        return self.submit_plan(img, to_plan(expr, name=name, policy=policy))
+
+    def run(self, img, op: str = "erode", se=(3, 3)):
+        return self.submit(img, op, se).result()
+
+    def run_plan(self, img, plan: "str | Plan"):
+        return self.submit_plan(img, plan).result()
+
+    def run_expr(self, img, expr, name: str | None = None):
+        return self.submit_expr(img, expr, name).result()
+
+    def run_batch(self, imgs, plan: "str | Plan") -> list:
+        futures = [self.submit_plan(im, plan) for im in imgs]
+        return [f.result() for f in futures]
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        per = [s.stats() for s in self.shards]
+        cache = {
+            k: sum(p["cache"][k] for p in per)
+            for k in ("size", "hits", "misses", "evictions")
+        }
+        total = cache["hits"] + cache["misses"]
+        cache["hit_rate"] = cache["hits"] / total if total else 0.0
+        bounded = {
+            k: sum(p["bounded_iter"][k] for p in per)
+            for k in ("executions", "iters_used", "iters_budget")
+        }
+        bounded["saved_frac"] = (
+            1.0 - bounded["iters_used"] / bounded["iters_budget"]
+            if bounded["iters_budget"] else 0.0
+        )
+        return {
+            "shards": len(self.shards),
+            "requests": sum(p["requests"] for p in per),
+            "batches": sum(p["batches"] for p in per),
+            "tiled_requests": sum(p["tiled_requests"] for p in per),
+            "img_per_s": sum(p["img_per_s"] for p in per),
+            "p50_ms": max(p["p50_ms"] for p in per),
+            "p99_ms": max(p["p99_ms"] for p in per),
+            "cache": cache,
+            "bounded_iter": bounded,
+            "effective_window_ms": max(p["effective_window_ms"] for p in per),
+            "backend": per[0]["backend"],
+            "interpret": per[0]["interpret"],
+            "per_shard": per,
+        }
+
+    # ------------------------------------------------------------ lifecycle
+    def flush(self, timeout: float | None = None) -> bool:
+        return all(s.flush(timeout) for s in self.shards)
+
+    def close(self) -> None:
+        for s in self.shards:
+            s.close()
+
+    def __enter__(self) -> "ShardedMorphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

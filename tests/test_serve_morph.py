@@ -157,6 +157,52 @@ def test_tiled_full_plan_bit_exact():
     np.testing.assert_array_equal(outs["edges"], np.asarray(edges[0]))
 
 
+def test_tile_gather_is_device_resident():
+    """Regression for the ROADMAP "streamed tile gather" item: halo tiles
+    are assembled with device-side dynamic_slice from one padded device
+    copy — not host numpy — and the stitched seams stay bit-exact on a
+    shape divisible by neither the interior nor the launch batch."""
+    import jax
+
+    from repro.serve.morph.tiling import extract_tiles
+
+    img = rand((71, 93))
+    plan = get_plan("document_cleanup")
+    tiles, rects, interiors = extract_tiles(img, plan, (32, 32))
+    assert isinstance(tiles, jax.Array)  # gathered on device, no host copy
+    gh, gw = plan.halo()
+    assert tiles.shape[1:] == (32 + 2 * gh, 32 + 2 * gw)
+    # seam exactness through the full service tiled route
+    outs = run_tiled(img, plan, tiled_execute(plan),
+                     tile_interior=(32, 32), launch_batch=4)
+    clean, edges = cleanup_batch(img[None])
+    np.testing.assert_array_equal(outs["clean"], np.asarray(clean[0]))
+    np.testing.assert_array_equal(outs["edges"], np.asarray(edges[0]))
+
+
+def test_executor_aux_reports_bounded_iters():
+    """with_aux=True surfaces BoundedIter convergence depth; plans without
+    bounded iteration report a zero budget."""
+    from repro.morph import Var, X, reconstruct_by_dilation_expr, to_plan
+
+    plan = to_plan(
+        reconstruct_by_dilation_expr(
+            X.erode((7, 7)), Var("x"), iters=32, until_stable=False
+        ),
+        name="aux_recon",
+    )
+    x = jnp.asarray(rand((24, 24))[None])
+    rect = jnp.asarray(np.array([[0, 24, 0, 24]], np.int32))
+    outs, aux = build_executor(plan, with_aux=True)(x, rect)
+    ref = build_executor(plan)(x, rect)  # default shape: no aux
+    np.testing.assert_array_equal(np.asarray(outs["out"]), np.asarray(ref["out"]))
+    assert int(aux["iters_budget"]) == 32
+    assert 0 < int(aux["iters_used"]) <= 32
+    plain = single_op_plan("erode", (3, 3))
+    _, aux2 = build_executor(plain, with_aux=True)(x, rect)
+    assert int(aux2["iters_budget"]) == 0
+
+
 def test_service_routes_oversized_images_to_tiling():
     img = rand((200, 150))
     with MorphService(
