@@ -7,6 +7,7 @@ executable cache, and halo-correct tiling over the fused 2-D kernels.
 from repro.serve.morph.batcher import MicroBatcher
 from repro.serve.morph.buckets import (
     DEFAULT_BUCKETS,
+    check_buckets,
     choose_bucket,
     crop_from_bucket,
     pad_to_bucket,
@@ -17,6 +18,7 @@ from repro.serve.morph.plans import (
     Backend,
     Plan,
     Step,
+    UnknownPlan,
     VALID_BACKENDS,
     build_executor,
     check_backend,
@@ -25,6 +27,20 @@ from repro.serve.morph.plans import (
     register_plan,
     single_op_plan,
     to_plan,
+)
+from repro.serve.morph.resilience import (
+    DeadlineExceeded,
+    ExecutorError,
+    FailoverPolicy,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    Overloaded,
+    PoisonedRequest,
+    RetryPolicy,
+    ServeError,
+    ServiceClosed,
+    ShardUnavailable,
 )
 from repro.serve.morph.service import (
     ExecutableCache,
@@ -37,6 +53,20 @@ from repro.serve.morph.tiling import extract_tiles, run_tiled
 __all__ = [
     "MicroBatcher",
     "DEFAULT_BUCKETS",
+    "check_buckets",
+    "UnknownPlan",
+    "DeadlineExceeded",
+    "ExecutorError",
+    "FailoverPolicy",
+    "FaultInjector",
+    "FaultPlan",
+    "InjectedFault",
+    "Overloaded",
+    "PoisonedRequest",
+    "RetryPolicy",
+    "ServeError",
+    "ServiceClosed",
+    "ShardUnavailable",
     "choose_bucket",
     "crop_from_bucket",
     "pad_to_bucket",

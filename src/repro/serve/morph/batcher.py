@@ -3,10 +3,26 @@
 Requests carry a *group key* (plan + bucket + dtype — anything that must
 match for images to share an executable). The single worker thread collects
 arrivals per key and dispatches a group when it reaches ``max_batch`` or its
-oldest member has waited ``window_s``, whichever comes first — the standard
-serving trade of a bounded latency tax for batch occupancy. All JAX
-dispatch happens on the worker thread; callers only touch numpy arrays and
+dispatch deadline passes, whichever comes first — the standard serving trade
+of a bounded latency tax for batch occupancy. All JAX dispatch happens on
+the worker thread; callers only touch numpy arrays and
 ``concurrent.futures.Future`` results.
+
+Resilience (see resilience.py for the vocabulary):
+
+* **Admission control** — ``max_queue`` bounds outstanding (queued +
+  in-flight) requests; ``submit`` raises :class:`Overloaded` past it, so
+  overload sheds load instead of growing the queue until the host OOMs.
+* **Deadlines** — a request may carry ``req.deadline`` (absolute monotonic
+  seconds). A group's dispatch deadline is the *earlier* of its batching
+  window and its most urgent member, due groups dispatch most-urgent-first,
+  and members whose deadline already passed fail with
+  :class:`DeadlineExceeded` instead of occupying the executor.
+* **Failure isolation** — a failed group retries with exponential backoff
+  (``RetryPolicy``; only for ``retryable`` errors), then *bisects*: each
+  half re-dispatches independently, recursively, so one poison request
+  fails alone while every batch-mate still completes. Exceptions never fan
+  out across a whole cohort anymore unless every member really fails.
 
 With ``adaptive=True`` the window is load-aware: ``window_s`` becomes the
 *effective* window, bounded by ``[min_window_s, max_window_s]``. Each
@@ -23,6 +39,13 @@ import threading
 import time
 from typing import Any, Callable
 
+from repro.serve.morph.resilience import (
+    DeadlineExceeded,
+    Overloaded,
+    RetryPolicy,
+    ServiceClosed,
+)
+
 _STOP = object()
 
 
@@ -31,8 +54,10 @@ class MicroBatcher:
     ``execute_group(key, requests)`` on a dedicated worker thread.
 
     ``execute_group`` owns success paths (setting ``req.future`` results);
-    the batcher guarantees every request's future is resolved — exceptions
-    escaping ``execute_group`` are fanned out to the group's futures.
+    the batcher guarantees every request's future is resolved exactly once —
+    exceptions escaping ``execute_group`` are retried/bisected per
+    ``retry``, and whatever still fails is fanned out to the (sub)group's
+    futures.
     """
 
     def __init__(
@@ -43,12 +68,18 @@ class MicroBatcher:
         window_s: float = 0.002,
         adaptive: bool = False,
         min_window_s: float = 0.0,
+        max_queue: int | None = None,
+        retry: RetryPolicy | None = None,
         name: str = "morph-batcher",
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
         self._execute = execute_group
         self.max_batch = max_batch
+        self.max_queue = max_queue
+        self.retry = retry
         self.window_s = window_s
         self.max_window_s = window_s
         self.min_window_s = min(min_window_s, window_s)
@@ -61,6 +92,13 @@ class MicroBatcher:
         self._cv = threading.Condition()
         self._outstanding = 0
         self._closed = False
+        # resilience counters (worker/submit threads; ints under the cv lock
+        # or the worker thread only — snapshot() reads under the lock)
+        self.rejected = 0          # Overloaded submits
+        self.expired = 0           # requests failed with DeadlineExceeded
+        self.retries = 0           # re-dispatches of a failed group
+        self.bisections = 0        # group splits after retries ran out
+        self.request_failures = 0  # futures resolved with an exception
         self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
         self._thread.start()
 
@@ -71,7 +109,13 @@ class MicroBatcher:
         # worker has already consumed (SimpleQueue.put never blocks).
         with self._cv:
             if self._closed:
-                raise RuntimeError("batcher is closed")
+                raise ServiceClosed("service is closed; submit() rejected")
+            if self.max_queue is not None and self._outstanding >= self.max_queue:
+                self.rejected += 1
+                raise Overloaded(
+                    f"submit queue full ({self._outstanding} outstanding, "
+                    f"max_queue={self.max_queue})"
+                )
             self._outstanding += 1
             self._q.put(req)
 
@@ -81,7 +125,8 @@ class MicroBatcher:
             return self._cv.wait_for(lambda: self._outstanding == 0, timeout=timeout)
 
     def close(self) -> None:
-        """Drain remaining requests, then stop the worker."""
+        """Drain remaining requests, then stop the worker. Idempotent —
+        concurrent/double close() both join the same drained worker."""
         with self._cv:
             if self._closed:
                 self._thread.join()
@@ -89,6 +134,16 @@ class MicroBatcher:
             self._closed = True
             self._q.put(_STOP)
         self._thread.join()
+
+    def counters(self) -> dict:
+        with self._cv:
+            return {
+                "rejected_overloaded": self.rejected,
+                "deadline_expired": self.expired,
+                "retries": self.retries,
+                "bisections": self.bisections,
+                "request_failures": self.request_failures,
+            }
 
     # ---------------------------------------------------------- worker loop
     def _poll(self, pending: dict, draining: bool):
@@ -116,14 +171,27 @@ class MicroBatcher:
             elif item is not None:
                 if item.key not in pending:
                     pending[item.key] = (time.monotonic() + self.window_s, [])
-                pending[item.key][1].append(item)
+                deadline, reqs = pending[item.key]
+                reqs.append(item)
+                # a member more urgent than the batching window pulls the
+                # whole group's dispatch forward — to HALF its remaining
+                # slack, not the deadline itself, so it leaves the queue with
+                # time left to execute (a deadline bounds queue wait; a
+                # dispatched request can't be preempted mid-executor)
+                req_deadline = getattr(item, "deadline", None)
+                if req_deadline is not None:
+                    now = time.monotonic()
+                    urgent = now + max(0.0, req_deadline - now) / 2.0
+                    if urgent < deadline:
+                        pending[item.key] = (urgent, reqs)
             now = time.monotonic()
             due = [
-                key
+                (deadline, key)
                 for key, (deadline, reqs) in pending.items()
                 if draining or deadline <= now or len(reqs) >= self.max_batch
             ]
-            for key in due:
+            due.sort()  # most urgent group first (deadline-aware ordering)
+            for _, key in due:
                 _, reqs = pending.pop(key)
                 if not draining:  # drain flushes partials; don't learn from it
                     # backlog = work already queued behind this group; at a
@@ -155,11 +223,83 @@ class MicroBatcher:
                 shrunk = self.min_window_s
             self.window_s = max(self.min_window_s, shrunk)
 
+    # ------------------------------------------------------ failure handling
+    def _fail(self, reqs: list, exc: BaseException) -> None:
+        for r in reqs:
+            if not r.future.done():
+                r.future.set_exception(exc)
+        with self._cv:
+            self.request_failures += len(reqs)
+
+    def _drop_expired(self, reqs: list) -> list:
+        now = time.monotonic()
+        live = []
+        expired = []
+        for r in reqs:
+            deadline = getattr(r, "deadline", None)
+            if deadline is not None and deadline <= now:
+                expired.append(r)
+            else:
+                live.append(r)
+        if expired:
+            with self._cv:
+                self.expired += len(expired)
+            self._fail(
+                expired,
+                DeadlineExceeded(
+                    f"deadline passed before dispatch "
+                    f"({len(expired)} of {len(reqs)} in group)"
+                ),
+            )
+        return live
+
+    def _try_execute(self, key, reqs: list, *, retry: bool) -> BaseException | None:
+        """One dispatch plus bounded retries; returns the final exception or
+        None on success. Only ``retryable`` errors retry."""
+        policy = self.retry if retry else None
+        attempts = 1 + (policy.max_retries if policy else 0)
+        last: BaseException | None = None
+        for attempt in range(attempts):
+            if attempt:
+                with self._cv:
+                    self.retries += 1
+                backoff = policy.backoff_s(attempt - 1)
+                if backoff > 0:
+                    time.sleep(backoff)
+            try:
+                self._execute(key, reqs)
+                return None
+            except BaseException as exc:  # noqa: BLE001 — classified below
+                last = exc
+                if not getattr(exc, "retryable", True):
+                    return exc
+        return last
+
+    def _run_group(self, key, reqs: list, *, retry: bool) -> None:
+        """Execute with retry; on persistent failure bisect so only the
+        smallest failing subset carries the exception."""
+        reqs = self._drop_expired(reqs)
+        if not reqs:
+            return
+        exc = self._try_execute(key, reqs, retry=retry)
+        if exc is None:
+            return
+        if len(reqs) == 1 or not (self.retry and self.retry.bisect):
+            self._fail(reqs, exc)
+            return
+        with self._cv:
+            self.bisections += 1
+        mid = len(reqs) // 2
+        # halves dispatch without further retries: the top-level retry
+        # already ran, and O(log n) isolation must stay O(log n) dispatches
+        self._run_group(key, reqs[:mid], retry=False)
+        self._run_group(key, reqs[mid:], retry=False)
+
     def _dispatch(self, key, reqs: list) -> None:
         try:
-            self._execute(key, reqs)
-        except BaseException as exc:  # noqa: BLE001 — fan failure out to callers
-            for r in reqs:
+            self._run_group(key, reqs, retry=True)
+        except BaseException as exc:  # noqa: BLE001 — belt and braces: never
+            for r in reqs:            # leave a future hanging
                 if not r.future.done():
                     r.future.set_exception(exc)
         finally:

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.serve.morph.resilience import ServeError
+
 # Ladder of (H, W) buckets. Lane-friendly widths (multiples of 128) so the
 # fused kernel's column grid pads nothing on top; (608, 896) covers the
 # paper's 600x800 experimental image with <2% waste.
@@ -31,6 +33,23 @@ DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
     (608, 896),
     (1024, 1024),
 )
+
+
+def check_buckets(
+    buckets: tuple[tuple[int, int], ...]
+) -> tuple[tuple[int, int], ...]:
+    """Validate a bucket ladder loudly at service construction — a malformed
+    ladder must not surface later as an opaque shape error on the batcher
+    thread (where it would poison whole dispatch groups)."""
+    if not buckets:
+        raise ServeError(
+            "empty bucket ladder: every request would take the tiled route; "
+            "pass at least one (H, W) bucket"
+        )
+    for b in buckets:
+        if len(b) != 2 or any(int(s) < 1 for s in b):
+            raise ServeError(f"malformed bucket {b!r}: want (H >= 1, W >= 1)")
+    return buckets
 
 
 def choose_bucket(

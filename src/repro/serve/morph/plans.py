@@ -51,6 +51,7 @@ from repro.morph.analyze import halo as expr_halo
 from repro.morph.expr import MorphExpr
 from repro.morph.interp import evaluate
 from repro.morph.plan_compile import steps_to_outputs, to_plan
+from repro.serve.morph.resilience import ServeError
 
 _OPS = ("erode", "dilate", "opening", "closing", "gradient")
 
@@ -137,13 +138,25 @@ def document_cleanup_plan() -> Plan:
 PLANS: dict[str, Plan] = {"document_cleanup": document_cleanup_plan()}
 
 
+class UnknownPlan(ServeError, KeyError):
+    """Typed lookup failure from :func:`get_plan`; subclasses KeyError so
+    pre-resilience callers that caught the registry miss keep working."""
+
+    retryable = False
+
+    def __str__(self):  # KeyError.__str__ repr()s the message; keep it plain
+        return self.args[0] if self.args else ""
+
+
 def get_plan(plan: "str | Plan") -> Plan:
     if isinstance(plan, Plan):
         return plan
     try:
         return PLANS[plan]
     except KeyError:
-        raise KeyError(f"unknown plan {plan!r}; registered: {sorted(PLANS)}") from None
+        raise UnknownPlan(
+            f"unknown plan {plan!r}; registered: {sorted(PLANS)}"
+        ) from None
 
 
 def register_plan(plan: Plan) -> Plan:
@@ -239,6 +252,7 @@ __all__ = [
     "single_op_plan",
     "document_cleanup_plan",
     "PLANS",
+    "UnknownPlan",
     "get_plan",
     "register_plan",
     "mask_outside",

@@ -1,0 +1,281 @@
+"""Resilience primitives for the morphology serving tier.
+
+The serving engine's failure story before this module: one exception inside
+a dispatched group poisoned every batch-mate's future, queues grew without
+bound until the host OOMed, and a dead shard simply stopped answering. This
+module holds the typed vocabulary and policies the batcher, service, and
+sharded router use to do better:
+
+* :class:`ServeError` and its family — every failure a caller can observe
+  carries (plan, bucket, dtype, batch, shard) context instead of a bare
+  XLA traceback, and a ``retryable`` flag the batcher's retry loop honors;
+* :class:`RetryPolicy` — bounded exponential backoff for transient dispatch
+  failures, after which the batcher *bisects* the group so one poison
+  request fails alone while its batch-mates complete;
+* :class:`FailoverPolicy` — the sharded router's consecutive-failure
+  circuit breaker (open after N failures, half-open probe after an
+  interval, close on probe success) and reroute budget;
+* :class:`FaultPlan` / :class:`FaultInjector` — a deterministic fault
+  harness: fail shard N starting at dispatch K, inject latency, poison one
+  tagged request. Counting is by dispatch ordinal (never random, never
+  wall-clock), so chaos tests replay exactly. A service with ``faults=None``
+  never constructs an injector — the off path is one ``is None`` check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+# --------------------------------------------------------------------- errors
+class ServeError(Exception):
+    """Base class for every typed serving failure.
+
+    ``retryable`` tells the batcher whether re-dispatching the same group
+    can possibly succeed (transient device trouble: yes; a poisoned request
+    or an expired deadline: no). Context fields render into the message so
+    a bare ``str(exc)`` in a log is already actionable.
+    """
+
+    retryable = True
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        plan: str | None = None,
+        bucket: "tuple[int, int] | None" = None,
+        dtype: str | None = None,
+        batch: int | None = None,
+        shard: int | None = None,
+    ):
+        self.plan = plan
+        self.bucket = bucket
+        self.dtype = dtype
+        self.batch = batch
+        self.shard = shard
+        ctx = ", ".join(
+            f"{k}={v}"
+            for k, v in (
+                ("plan", plan),
+                ("bucket", bucket),
+                ("dtype", dtype),
+                ("batch", batch),
+                ("shard", shard),
+            )
+            if v is not None
+        )
+        super().__init__(f"{message} [{ctx}]" if ctx else message)
+
+
+class Overloaded(ServeError):
+    """Admission control: the submit queue is at ``max_queue``. Shed load —
+    the caller should back off or downgrade, not wait."""
+
+    retryable = False
+
+
+class DeadlineExceeded(ServeError):
+    """The request's deadline passed before (or while) it could dispatch."""
+
+    retryable = False
+
+
+class ServiceClosed(ServeError, RuntimeError):
+    """``submit()`` after ``close()``. Subclasses RuntimeError so callers
+    that guarded against the old opaque queue failure keep working."""
+
+    retryable = False
+
+
+class ExecutorError(ServeError):
+    """An executor build (trace/compile) or run failed; wraps the original
+    exception (``__cause__``) with the group's full serving context."""
+
+
+class PoisonedRequest(ServeError):
+    """Fault injection: this specific request is marked to fail. Never
+    retryable — bisection must isolate it instead."""
+
+    retryable = False
+
+    def __init__(self, message: str, *, tag: str | None = None, **kw):
+        super().__init__(message, **kw)
+        self.tag = tag
+
+
+class InjectedFault(ServeError):
+    """Fault injection: a simulated transient dispatch failure (a dying
+    shard, a flaky device). Retryable, like the real thing."""
+
+
+class ShardUnavailable(ServeError):
+    """The sharded router has no healthy shard left to route to."""
+
+    retryable = False
+
+
+# ------------------------------------------------------------------- policies
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-then-bisect for failed dispatch groups.
+
+    A failed group is re-dispatched up to ``max_retries`` times with
+    exponential backoff (``backoff_ms * 2**attempt``, capped). If it still
+    fails — or the error is not retryable — groups of more than one request
+    split in half and each half dispatches independently, recursively, so a
+    single poison request ends up failing alone (O(log batch) extra
+    dispatches) while every batch-mate completes.
+    """
+
+    max_retries: int = 1
+    backoff_ms: float = 2.0
+    backoff_cap_ms: float = 100.0
+    bisect: bool = True
+
+    def backoff_s(self, attempt: int) -> float:
+        return min(self.backoff_ms * (2.0 ** attempt), self.backoff_cap_ms) / 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverPolicy:
+    """Per-shard circuit breaker + reroute rules for the sharded router.
+
+    ``failure_threshold`` consecutive shard-level failures open the breaker;
+    while open, the shard's groups reroute deterministically to survivors.
+    After ``probe_interval_s`` one live request is allowed through as a
+    half-open probe — success closes the breaker (the shard's groups return
+    home), failure re-opens it and restarts the interval.
+    """
+
+    failure_threshold: int = 3
+    probe_interval_s: float = 5.0
+    rewarm: bool = True  # pre-compile a rerouted group on its survivor
+
+
+# ------------------------------------------------------------ fault injection
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative, deterministic fault schedule (all counting is by
+    dispatch ordinal within one service — replayable, never random).
+
+    * ``fail_after``/``fail_for``: dispatches ``[fail_after, fail_after +
+      fail_for)`` raise :class:`InjectedFault` (``fail_for=None`` = forever).
+      ``fail_shard`` scopes the failures to one shard of a router (``None``
+      = every service the plan reaches).
+    * ``latency_ms`` sleeps before every dispatch (``latency_shard`` scopes
+      it the same way) — the knob for degraded-but-alive experiments.
+    * ``poison_tags``: any request submitted with a matching ``tag`` raises
+      :class:`PoisonedRequest` for the group it rides in; bisection must
+      isolate it.
+    """
+
+    fail_shard: int | None = None
+    fail_after: int | None = None
+    fail_for: int | None = None
+    latency_ms: float = 0.0
+    latency_shard: int | None = None
+    poison_tags: frozenset = frozenset()
+
+    def __post_init__(self):
+        # normalize so tests can pass a list/set/tuple of tags
+        if not isinstance(self.poison_tags, frozenset):
+            object.__setattr__(self, "poison_tags", frozenset(self.poison_tags))
+
+    @property
+    def enabled(self) -> bool:
+        return (
+            self.fail_after is not None
+            or self.latency_ms > 0.0
+            or bool(self.poison_tags)
+        )
+
+    def scoped(self, shard_index: int) -> "FaultPlan":
+        """The plan as seen by shard ``shard_index`` of a router: shard-
+        scoped clauses drop unless they name this shard; poison tags apply
+        wherever the tagged request lands."""
+        fail_after = (
+            self.fail_after
+            if self.fail_shard is None or self.fail_shard == shard_index
+            else None
+        )
+        latency = (
+            self.latency_ms
+            if self.latency_shard is None or self.latency_shard == shard_index
+            else 0.0
+        )
+        return dataclasses.replace(
+            self,
+            fail_after=fail_after,
+            latency_ms=latency,
+            fail_shard=None,
+            latency_shard=None,
+        )
+
+
+class FaultInjector:
+    """Runtime counterpart of a :class:`FaultPlan` — one per service, its
+    dispatch counter advanced under a lock so concurrent executors see a
+    single deterministic ordinal sequence."""
+
+    def __init__(self, plan: FaultPlan, *, shard: int | None = None):
+        self.plan = plan
+        self.shard = shard
+        self.dispatches = 0
+        self.injected_faults = 0
+        self.injected_latency_s = 0.0
+        self._lock = threading.Lock()
+
+    def before_dispatch(self, reqs) -> None:
+        """Called by the executor with the group about to run; raises the
+        scheduled fault (if any) *before* any compute happens."""
+        with self._lock:
+            n = self.dispatches
+            self.dispatches += 1
+        if self.plan.latency_ms > 0.0:
+            time.sleep(self.plan.latency_ms / 1e3)
+            with self._lock:
+                self.injected_latency_s += self.plan.latency_ms / 1e3
+        fa, ff = self.plan.fail_after, self.plan.fail_for
+        if fa is not None and n >= fa and (ff is None or n < fa + ff):
+            with self._lock:
+                self.injected_faults += 1
+            raise InjectedFault(
+                f"injected fault at dispatch {n}", shard=self.shard
+            )
+        if self.plan.poison_tags:
+            for r in reqs:
+                tag = getattr(r, "tag", None)
+                if tag in self.plan.poison_tags:
+                    with self._lock:
+                        self.injected_faults += 1
+                    raise PoisonedRequest(
+                        f"injected poison for tag {tag!r}",
+                        tag=tag,
+                        shard=self.shard,
+                    )
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "dispatches": self.dispatches,
+                "injected_faults": self.injected_faults,
+                "injected_latency_s": round(self.injected_latency_s, 6),
+            }
+
+
+__all__ = [
+    "ServeError",
+    "Overloaded",
+    "DeadlineExceeded",
+    "ServiceClosed",
+    "ExecutorError",
+    "PoisonedRequest",
+    "InjectedFault",
+    "ShardUnavailable",
+    "RetryPolicy",
+    "FailoverPolicy",
+    "FaultPlan",
+    "FaultInjector",
+]

@@ -34,9 +34,19 @@ from repro.core.dispatch import DispatchPolicy, resolve_interpret
 from repro.serve.morph.batcher import MicroBatcher
 from repro.serve.morph.buckets import (
     DEFAULT_BUCKETS,
+    check_buckets,
     choose_bucket,
     crop_from_bucket,
     valid_rect,
+)
+from repro.serve.morph.resilience import (
+    DeadlineExceeded,
+    ExecutorError,
+    FaultInjector,
+    FaultPlan,
+    FailoverPolicy,
+    RetryPolicy,
+    ServeError,
 )
 from repro.morph.plan_compile import to_plan
 from repro.serve.morph.plans import (
@@ -195,6 +205,20 @@ class ServiceConfig:
     # router (repro.shard.router) runs each shard's batcher under its own
     # mesh slot. None = the process default device.
     device: Any = None
+    # --- resilience (resilience.py) ---------------------------------------
+    # Admission bound on outstanding (queued + in-flight) requests; submit()
+    # raises Overloaded past it. None = unbounded (the pre-resilience mode).
+    max_queue: int | None = 1024
+    # Deadline applied to every request that doesn't pass its own
+    # deadline_ms to submit_plan(); None = no deadline.
+    default_deadline_ms: float | None = None
+    # Retry-with-backoff then bisect for failed dispatch groups.
+    retry: RetryPolicy = RetryPolicy()
+    # Circuit breaker / reroute rules — read by ShardedMorphService, inert
+    # for a standalone service.
+    failover: FailoverPolicy = FailoverPolicy()
+    # Deterministic fault injection; None (default) adds zero overhead.
+    faults: FaultPlan | None = None
 
 
 @dataclasses.dataclass
@@ -205,6 +229,8 @@ class _Request:
     bucket: tuple[int, int] | None  # None -> tiled route
     future: Future
     t_submit: float
+    deadline: float | None = None  # absolute monotonic seconds
+    tag: str | None = None  # caller label; fault injection poisons by tag
 
 
 class MorphService:
@@ -217,6 +243,7 @@ class MorphService:
 
     def __init__(self, config: ServiceConfig | None = None):
         self.config = config or ServiceConfig()
+        check_buckets(self.config.buckets)
         self.policy = self.config.policy or DispatchPolicy.calibrated()
         self.interpret = resolve_interpret(self.config.interpret, self.policy)
         if self.config.backend == "auto":
@@ -229,27 +256,57 @@ class MorphService:
             self.backend = check_backend(self.config.backend)
         self.cache = ExecutableCache(self.config.cache_size)
         self._stats = ServiceStats(self.config.stats_window)
+        faults = self.config.faults
+        self._injector = (
+            FaultInjector(faults) if faults is not None and faults.enabled else None
+        )
         self._batcher = MicroBatcher(
             self._execute_group,
             max_batch=self.config.max_batch,
             window_s=self.config.window_ms / 1e3,
             adaptive=self.config.adaptive_window,
             min_window_s=self.config.min_window_ms / 1e3,
+            max_queue=self.config.max_queue,
+            retry=self.config.retry,
         )
 
     # ------------------------------------------------------------ submission
-    def submit(self, img, op: str = "erode", se=(3, 3)) -> Future:
+    def submit(self, img, op: str = "erode", se=(3, 3), **kw) -> Future:
         """Single-op request; resolves to the cropped result array."""
-        return self.submit_plan(img, single_op_plan(op, se))
+        return self.submit_plan(img, single_op_plan(op, se), **kw)
 
-    def submit_plan(self, img, plan: "str | Plan") -> Future:
+    def submit_plan(
+        self,
+        img,
+        plan: "str | Plan",
+        *,
+        deadline_ms: float | None = None,
+        tag: str | None = None,
+    ) -> Future:
         """Plan request; resolves to an array (single-output plans) or a
-        ``{name: array}`` dict (plans with named outputs)."""
+        ``{name: array}`` dict (plans with named outputs).
+
+        ``deadline_ms`` (default ``config.default_deadline_ms``) bounds how
+        long the request may wait: expired requests fail with a typed
+        :class:`DeadlineExceeded` instead of occupying the executor, and an
+        urgent request pulls its whole group's dispatch forward. ``tag`` is
+        a caller label carried on the request (fault injection poisons by
+        tag; it never affects routing or batching)."""
         plan = get_plan(plan)
         img = np.asarray(img)
         if img.ndim != 2:
             raise ValueError("the service takes single (H, W) images; submit "
                              "each image of a batch separately")
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        deadline = None
+        if deadline_ms is not None:
+            if deadline_ms <= 0:
+                raise DeadlineExceeded(
+                    f"deadline_ms={deadline_ms} already expired at submit",
+                    plan=plan.name,
+                )
+            deadline = time.monotonic() + deadline_ms / 1e3
         bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
         if bucket is None:
             gh, gw = plan.halo()
@@ -258,31 +315,34 @@ class MorphService:
             key = ("tiled", plan, ext, img.dtype.str)
         else:
             key = ("bucket", plan, bucket, img.dtype.str)
-        req = _Request(key, img, plan, bucket, Future(), time.monotonic())
+        req = _Request(key, img, plan, bucket, Future(), time.monotonic(),
+                       deadline=deadline, tag=tag)
         self._batcher.submit(req)
         return req.future
 
-    def submit_expr(self, img, expr, name: str | None = None) -> Future:
+    def submit_expr(self, img, expr, name: str | None = None, **kw) -> Future:
         """Morphology-expression request (``repro.morph``): any graph over
         ``Var("x")`` — including ``BoundedIter`` reconstruction chains — is
         compiled into a plan and served; equal expressions share one cached
         executable. Plan compilation honors the service's policy (notably
         ``opt_level`` — a ``DispatchPolicy(opt_level=0)`` service really
         serves the raw graph)."""
-        return self.submit_plan(img, to_plan(expr, name=name, policy=self.policy))
+        return self.submit_plan(
+            img, to_plan(expr, name=name, policy=self.policy), **kw
+        )
 
-    def run(self, img, op: str = "erode", se=(3, 3)):
-        return self.submit(img, op, se).result()
+    def run(self, img, op: str = "erode", se=(3, 3), **kw):
+        return self.submit(img, op, se, **kw).result()
 
-    def run_plan(self, img, plan: "str | Plan"):
-        return self.submit_plan(img, plan).result()
+    def run_plan(self, img, plan: "str | Plan", **kw):
+        return self.submit_plan(img, plan, **kw).result()
 
-    def run_expr(self, img, expr, name: str | None = None):
-        return self.submit_expr(img, expr, name).result()
+    def run_expr(self, img, expr, name: str | None = None, **kw):
+        return self.submit_expr(img, expr, name, **kw).result()
 
-    def run_batch(self, imgs, plan: "str | Plan") -> list:
+    def run_batch(self, imgs, plan: "str | Plan", **kw) -> list:
         """Synchronous convenience: submit all, wait for all, keep order."""
-        futures = [self.submit_plan(im, plan) for im in imgs]
+        futures = [self.submit_plan(im, plan, **kw) for im in imgs]
         return [f.result() for f in futures]
 
     # ------------------------------------------------------------- execution
@@ -326,6 +386,8 @@ class MorphService:
 
     def _execute_bucketed(self, key, reqs: list) -> None:
         _, plan, bucket, _ = key
+        if self._injector is not None:
+            self._injector.before_dispatch(reqs)
         bb = min(_round_up_pow2(len(reqs)), self.config.max_batch)
         batch = np.zeros((bb, *bucket), dtype=reqs[0].img.dtype)
         rects = np.zeros((bb, 4), dtype=np.int32)
@@ -333,9 +395,20 @@ class MorphService:
             h, w = r.img.shape
             batch[i, :h, :w] = r.img  # rows past len(reqs) keep an empty rect
             rects[i] = valid_rect(h, w)
-        execute = self._executor_for(plan, bucket, batch.dtype, bb)
-        outs, aux = execute(jnp.asarray(batch), jnp.asarray(rects))
-        outs = {k: np.asarray(v) for k, v in outs.items()}
+        try:
+            execute = self._executor_for(plan, bucket, batch.dtype, bb)
+            outs, aux = execute(jnp.asarray(batch), jnp.asarray(rects))
+            outs = {k: np.asarray(v) for k, v in outs.items()}
+        except ServeError:
+            raise
+        except Exception as exc:
+            raise ExecutorError(
+                f"executor failed: {type(exc).__name__}: {exc}",
+                plan=plan.name,
+                bucket=bucket,
+                dtype=np.dtype(batch.dtype).name,
+                batch=bb,
+            ) from exc
         self._record_aux(aux)
         names = plan.output_names()
         # record stats before resolving futures: a caller returning from
@@ -347,10 +420,17 @@ class MorphService:
             cropped = {
                 name: crop_from_bucket(outs[name][i], h, w) for name in names
             }
-            r.future.set_result(cropped["out"] if names == ("out",) else cropped)
+            if not r.future.done():
+                r.future.set_result(
+                    cropped["out"] if names == ("out",) else cropped
+                )
 
     def _execute_tiled(self, reqs: list) -> None:
         for r in reqs:
+            if r.future.done():
+                continue  # already served before a batch-mate failed a retry
+            if self._injector is not None:
+                self._injector.before_dispatch([r])
             gh, gw = r.plan.halo()
             ext = (self.config.tile_interior[0] + 2 * gh,
                    self.config.tile_interior[1] + 2 * gw)
@@ -363,20 +443,32 @@ class MorphService:
                 aux_chunks.append(aux)  # record after all chunks dispatch:
                 return outs             # int(aux) here would sync per launch
 
-            outs = run_tiled(
-                r.img,
-                r.plan,
-                execute,
-                tile_interior=self.config.tile_interior,
-                launch_batch=self.config.max_tiles_per_launch,
-            )
+            try:
+                outs = run_tiled(
+                    r.img,
+                    r.plan,
+                    execute,
+                    tile_interior=self.config.tile_interior,
+                    launch_batch=self.config.max_tiles_per_launch,
+                )
+            except ServeError:
+                raise
+            except Exception as exc:
+                raise ExecutorError(
+                    f"tiled executor failed: {type(exc).__name__}: {exc}",
+                    plan=r.plan.name,
+                    bucket=ext,
+                    dtype=np.dtype(r.img.dtype).name,
+                    batch=self.config.max_tiles_per_launch,
+                ) from exc
             names = r.plan.output_names()
             for aux in aux_chunks:
                 self._record_aux(aux)
             # record before resolving: a caller returning from result()
             # must observe its own request in stats()
             self._stats.record_tiled([time.monotonic() - r.t_submit])
-            r.future.set_result(outs["out"] if names == ("out",) else outs)
+            if not r.future.done():
+                r.future.set_result(outs["out"] if names == ("out",) else outs)
 
     # -------------------------------------------------------------- lifecycle
     def stats(self) -> dict:
@@ -387,12 +479,20 @@ class MorphService:
         snap["window_ms"] = self.config.window_ms
         snap["effective_window_ms"] = self._batcher.window_s * 1e3
         snap["adaptive_window"] = self.config.adaptive_window
+        resilience = self._batcher.counters()
+        resilience["max_queue"] = self.config.max_queue
+        resilience["faults"] = (
+            self._injector.snapshot() if self._injector is not None else None
+        )
+        snap["resilience"] = resilience
         return snap
 
     def flush(self, timeout: float | None = None) -> bool:
         return self._batcher.flush(timeout)
 
     def close(self) -> None:
+        """Drain in-flight requests and stop the batcher. Idempotent: a
+        second close() (or a close() racing __exit__) is a no-op join."""
         self._batcher.close()
 
     def __enter__(self) -> "MorphService":

@@ -14,6 +14,23 @@ hash of ``(plan, bucket, dtype)``:
   the aggregate cache is N times the single-service VMEM/HBM budget, which
   is the point of sharding the engine.
 
+Failure handling (ISSUE 6; vocabulary in serve/morph/resilience.py): each
+shard carries a consecutive-failure **circuit breaker**
+(``ServiceConfig.failover``). Shard-level failures (``InjectedFault``,
+``ExecutorError``) trip it after ``failure_threshold`` consecutive hits;
+while open, the shard's groups **reroute deterministically** to survivors —
+the same crc32 hashed over the healthy subset, so a given (plan, bucket,
+dtype) group keeps landing on one survivor and its batching stays coherent
+— and the router **rewarms** the survivor's executable cache in the
+background so rerouted traffic doesn't pay the compile in-line. After
+``probe_interval_s`` one live request is let through as a **half-open
+probe**: success closes the breaker (the shard's groups return home),
+failure re-opens it. A request that fails on a shard is transparently
+resubmitted to the next healthy shard (its caller future resolves with the
+rerouted result); request-level failures (deadline, poison, overload)
+propagate typed to the caller and never move the breaker. ``stats()``
+surfaces per-shard health and the reroute/rewarm/probe counters.
+
 Tiled (oversized) traffic routes the same way; each shard's device-side
 tile gather (serve/morph/tiling.py) keeps it off the host. For one giant
 image where *latency* matters more than engine throughput, use
@@ -26,14 +43,54 @@ take the worst shard (max), and the full per-shard list rides along.
 """
 from __future__ import annotations
 
+import dataclasses
+import threading
+import time
 import zlib
+from concurrent.futures import Future
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.morph.buckets import choose_bucket
 from repro.serve.morph.plans import Plan, get_plan, single_op_plan
+from repro.serve.morph.resilience import (
+    DeadlineExceeded,
+    ExecutorError,
+    InjectedFault,
+    ServeError,
+    ShardUnavailable,
+)
 from repro.serve.morph.service import MorphService, ServiceConfig
+
+# Failures that indict the *shard* (move its breaker); everything else —
+# deadline, poison, overload, closed — is about the request or the caller
+# and propagates without penalizing the shard that reported it.
+SHARD_LEVEL_ERRORS = (InjectedFault, ExecutorError)
+
+
+class _ShardHealth:
+    """Circuit-breaker state for one shard. All mutation happens under the
+    router's health lock; reads for stats() take the same lock."""
+
+    def __init__(self):
+        self.state = "closed"  # "closed" (healthy) | "open" (broken)
+        self.consecutive_failures = 0
+        self.opened_at: float | None = None
+        self.probing = False  # one half-open probe in flight
+        self.trips = 0
+        self.probes = 0
+        self.recoveries = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "state": "half-open" if self.probing else self.state,
+            "consecutive_failures": self.consecutive_failures,
+            "trips": self.trips,
+            "probes": self.probes,
+            "recoveries": self.recoveries,
+        }
 
 
 class ShardedMorphService:
@@ -46,8 +103,6 @@ class ShardedMorphService:
 
     def __init__(self, config: ServiceConfig | None = None, *,
                  mesh=None, devices=None):
-        import dataclasses
-
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh or devices, not both")
         if mesh is not None:
@@ -57,48 +112,259 @@ class ShardedMorphService:
         if not devices:
             raise ValueError("ShardedMorphService needs at least one device")
         self.config = config or ServiceConfig()
+        self.failover = self.config.failover
         self.devices = tuple(devices)
         self.shards = tuple(
-            MorphService(dataclasses.replace(self.config, device=d))
-            for d in self.devices
+            MorphService(dataclasses.replace(
+                self.config,
+                device=d,
+                # shard-scoped fault clauses apply only to their shard
+                faults=(self.config.faults.scoped(i)
+                        if self.config.faults is not None else None),
+            ))
+            for i, d in enumerate(self.devices)
         )
+        self._hlock = threading.Lock()
+        self._health = [_ShardHealth() for _ in self.shards]
+        # groups seen (token -> (plan, bucket, dtype)), for failover rewarm
+        self._groups: dict[bytes, tuple[Plan, tuple | None, str]] = {}
+        self._rewarmed: set[tuple[int, bytes]] = set()
+        self.reroutes = 0
+        self.rewarms = 0
+        self.failovers = 0  # breaker trips observed at routing level
 
     # ------------------------------------------------------------- routing
+    @staticmethod
+    def _token(plan: Plan, bucket, dtype_str: str) -> bytes:
+        return f"{plan.name}|{bucket}|{dtype_str}".encode()
+
     def _route(self, plan: Plan, img: np.ndarray) -> MorphService:
-        """Stable bucket-affine routing (see module docstring)."""
+        """The shard a request routes to right now (stable while health is
+        stable); kept for tests/benchmarks that pin a group's primary."""
         bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
-        token = f"{plan.name}|{bucket}|{img.dtype.str}".encode()
-        return self.shards[zlib.crc32(token) % len(self.shards)]
+        idx, _ = self._pick(self._token(plan, bucket, img.dtype.str), frozenset())
+        return self.shards[idx]
+
+    def _healthy(self, i: int) -> bool:
+        return self._health[i].state == "closed"
+
+    def _pick(self, token: bytes, excluded: frozenset) -> tuple[int, bool]:
+        """Deterministic shard choice for a group token: the crc32 primary
+        when healthy, else the same hash over the healthy survivors — a
+        broken shard's groups all move, each to one stable survivor. Returns
+        ``(index, is_probe)``; may promote the call into a half-open probe
+        of the primary. Raises :class:`ShardUnavailable` when nothing is
+        routable."""
+        h = zlib.crc32(token)
+        n = len(self.shards)
+        primary = h % n
+        now = time.monotonic()
+        with self._hlock:
+            hp = self._health[primary]
+            if primary not in excluded:
+                if hp.state == "closed":
+                    return primary, False
+                # broken primary: probe it if the interval elapsed and no
+                # probe is already in flight
+                if (
+                    not hp.probing
+                    and hp.opened_at is not None
+                    and now - hp.opened_at >= self.failover.probe_interval_s
+                ):
+                    hp.probing = True
+                    hp.probes += 1
+                    return primary, True
+            survivors = [
+                i for i in range(n)
+                if i not in excluded and i != primary and self._healthy(i)
+            ]
+            if not survivors:
+                raise ShardUnavailable(
+                    f"no healthy shard for group (primary {primary} "
+                    f"{hp.state}, {len(excluded)} excluded of {n})"
+                )
+            self.reroutes += 1
+            return survivors[h % len(survivors)], False
+
+    def _record_success(self, idx: int, was_probe: bool) -> None:
+        with self._hlock:
+            h = self._health[idx]
+            h.consecutive_failures = 0
+            if was_probe:
+                h.probing = False
+            if h.state != "closed":
+                h.state = "closed"
+                h.opened_at = None
+                h.recoveries += 1
+
+    def _record_failure(self, idx: int, was_probe: bool) -> list:
+        """Count a shard-level failure; on breaker trip, return the rewarm
+        work ((survivor, plan, bucket, dtype) tuples) to run outside the
+        lock."""
+        rewarm: list = []
+        with self._hlock:
+            h = self._health[idx]
+            h.consecutive_failures += 1
+            if was_probe:
+                h.probing = False
+            tripped = (
+                h.state == "closed"
+                and h.consecutive_failures >= self.failover.failure_threshold
+            )
+            if tripped or was_probe:
+                if h.state == "closed":
+                    h.trips += 1
+                    self.failovers += 1
+                h.state = "open"
+                h.opened_at = time.monotonic()
+            if tripped and self.failover.rewarm:
+                rewarm = self._rewarm_targets(idx)
+        return rewarm
+
+    # ------------------------------------------------------------- rewarm
+    def _rewarm_targets(self, dead: int) -> list:
+        """Under _hlock: every known bucketed group whose primary is the
+        dead shard, paired with the survivor it will deterministically
+        reroute to."""
+        n = len(self.shards)
+        survivors = [i for i in range(n) if i != dead and self._healthy(i)]
+        out = []
+        for token, (plan, bucket, dtype_str) in self._groups.items():
+            if bucket is None:  # tiled groups compile per image; skip
+                continue
+            h = zlib.crc32(token)
+            if h % n != dead or not survivors:
+                continue
+            target = survivors[h % len(survivors)]
+            if (target, token) not in self._rewarmed:
+                self._rewarmed.add((target, token))
+                out.append((target, plan, bucket, dtype_str))
+        return out
+
+    def _rewarm_async(self, targets: list) -> None:
+        """Compile a rerouted group's executable on its survivor off the
+        routing path, so the first rerouted request doesn't pay the compile
+        in-line. Batch bucket 1 — the smallest real executable; larger
+        batch buckets compile on demand as coalescing resumes."""
+        if not targets:
+            return
+
+        def warm():
+            for idx, plan, bucket, dtype_str in targets:
+                try:
+                    svc = self.shards[idx]
+                    with svc._device_scope():
+                        fn = svc._executor_for(plan, bucket, np.dtype(dtype_str), 1)
+                        fn(
+                            jnp.zeros((1, *bucket), np.dtype(dtype_str)),
+                            jnp.zeros((1, 4), np.int32),
+                        )
+                    with self._hlock:
+                        self.rewarms += 1
+                except Exception:  # noqa: BLE001 — warm is advisory only
+                    pass
+
+        threading.Thread(target=warm, name="shard-rewarm", daemon=True).start()
 
     # ---------------------------------------------------------- submission
-    def submit(self, img, op: str = "erode", se=(3, 3)):
-        return self.submit_plan(img, single_op_plan(op, se))
+    def submit(self, img, op: str = "erode", se=(3, 3), **kw):
+        return self.submit_plan(img, single_op_plan(op, se), **kw)
 
-    def submit_plan(self, img, plan: "str | Plan"):
+    def submit_plan(self, img, plan: "str | Plan", *,
+                    deadline_ms: float | None = None, tag: str | None = None):
         plan = get_plan(plan)
         img = np.asarray(img)
         if img.ndim != 2:
             raise ValueError("the service takes single (H, W) images; submit "
                              "each image of a batch separately")
-        return self._route(plan, img).submit_plan(img, plan)
+        bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
+        token = self._token(plan, bucket, img.dtype.str)
+        with self._hlock:
+            self._groups.setdefault(token, (plan, bucket, img.dtype.str))
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        deadline_at = (
+            time.monotonic() + deadline_ms / 1e3 if deadline_ms is not None else None
+        )
+        outer: Future = Future()
+        self._attempt(outer, img, plan, token, deadline_at, tag, frozenset())
+        return outer
 
-    def submit_expr(self, img, expr, name: str | None = None):
+    def _attempt(self, outer: Future, img, plan: Plan, token: bytes,
+                 deadline_at: float | None, tag: str | None,
+                 excluded: frozenset) -> None:
+        """Route one attempt; the done callback reroutes shard-level
+        failures to the next survivor until every shard has been tried, so
+        the caller's future always resolves — with the rerouted result or a
+        typed error."""
+        deadline_ms = None
+        if deadline_at is not None:
+            deadline_ms = (deadline_at - time.monotonic()) * 1e3
+            if deadline_ms <= 0:
+                if not outer.done():
+                    outer.set_exception(DeadlineExceeded(
+                        "deadline expired during failover", plan=plan.name))
+                return
+        try:
+            idx, was_probe = self._pick(token, excluded)
+        except ShardUnavailable as exc:
+            if not outer.done():
+                outer.set_exception(exc)
+            return
+        try:
+            fut = self.shards[idx].submit_plan(
+                img, plan, deadline_ms=deadline_ms, tag=tag
+            )
+        except ServeError as exc:
+            # submit-time rejection (Overloaded, ServiceClosed): back-
+            # pressure or shutdown, not a shard fault — shedding load is the
+            # point, don't spread the spill. Resolve the caller's future
+            # (this path may run inside a done callback, where a raise
+            # would vanish into the futures machinery and hang the caller).
+            if was_probe:
+                with self._hlock:
+                    self._health[idx].probing = False
+            if not outer.done():
+                outer.set_exception(exc)
+            return
+
+        def done(f, idx=idx, was_probe=was_probe):
+            exc = f.exception()
+            if exc is None:
+                self._record_success(idx, was_probe)
+                if not outer.done():
+                    outer.set_result(f.result())
+            elif isinstance(exc, SHARD_LEVEL_ERRORS):
+                rewarm = self._record_failure(idx, was_probe)
+                self._rewarm_async(rewarm)
+                nxt = excluded | {idx}
+                if len(nxt) < len(self.shards):
+                    self._attempt(outer, img, plan, token, deadline_at, tag, nxt)
+                elif not outer.done():
+                    outer.set_exception(exc)
+            else:  # request-level failure: typed, final, shard not indicted
+                if not outer.done():
+                    outer.set_exception(exc)
+
+        fut.add_done_callback(done)
+
+    def submit_expr(self, img, expr, name: str | None = None, **kw):
         from repro.morph.plan_compile import to_plan
 
         policy = self.shards[0].policy
-        return self.submit_plan(img, to_plan(expr, name=name, policy=policy))
+        return self.submit_plan(img, to_plan(expr, name=name, policy=policy), **kw)
 
-    def run(self, img, op: str = "erode", se=(3, 3)):
-        return self.submit(img, op, se).result()
+    def run(self, img, op: str = "erode", se=(3, 3), **kw):
+        return self.submit(img, op, se, **kw).result()
 
-    def run_plan(self, img, plan: "str | Plan"):
-        return self.submit_plan(img, plan).result()
+    def run_plan(self, img, plan: "str | Plan", **kw):
+        return self.submit_plan(img, plan, **kw).result()
 
-    def run_expr(self, img, expr, name: str | None = None):
-        return self.submit_expr(img, expr, name).result()
+    def run_expr(self, img, expr, name: str | None = None, **kw):
+        return self.submit_expr(img, expr, name, **kw).result()
 
-    def run_batch(self, imgs, plan: "str | Plan") -> list:
-        futures = [self.submit_plan(im, plan) for im in imgs]
+    def run_batch(self, imgs, plan: "str | Plan", **kw) -> list:
+        futures = [self.submit_plan(im, plan, **kw) for im in imgs]
         return [f.result() for f in futures]
 
     # ------------------------------------------------------------- metrics
@@ -118,8 +384,22 @@ class ShardedMorphService:
             1.0 - bounded["iters_used"] / bounded["iters_budget"]
             if bounded["iters_budget"] else 0.0
         )
+        resilience = {
+            k: sum(p["resilience"][k] for p in per)
+            for k in ("rejected_overloaded", "deadline_expired", "retries",
+                      "bisections", "request_failures")
+        }
+        with self._hlock:
+            health = [h.snapshot() for h in self._health]
+            resilience.update(
+                reroutes=self.reroutes,
+                rewarms=self.rewarms,
+                failovers=self.failovers,
+            )
         return {
             "shards": len(self.shards),
+            "healthy_shards": sum(h["state"] == "closed" for h in health),
+            "health": health,
             "requests": sum(p["requests"] for p in per),
             "batches": sum(p["batches"] for p in per),
             "tiled_requests": sum(p["tiled_requests"] for p in per),
@@ -128,6 +408,7 @@ class ShardedMorphService:
             "p99_ms": max(p["p99_ms"] for p in per),
             "cache": cache,
             "bounded_iter": bounded,
+            "resilience": resilience,
             "effective_window_ms": max(p["effective_window_ms"] for p in per),
             "backend": per[0]["backend"],
             "interpret": per[0]["interpret"],
@@ -139,6 +420,8 @@ class ShardedMorphService:
         return all(s.flush(timeout) for s in self.shards)
 
     def close(self) -> None:
+        """Idempotent: each shard's close() joins an already-drained
+        batcher on repeat calls."""
         for s in self.shards:
             s.close()
 

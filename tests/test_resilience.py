@@ -1,0 +1,535 @@
+"""Chaos suite for the fault-tolerant serving tier (ISSUE 6).
+
+Every guarantee the resilience layer makes is driven here with the
+deterministic fault-injection harness (``FaultPlan``/``FaultInjector`` —
+dispatch-ordinal counting, no randomness, no wall-clock triggers):
+
+* admission control sheds load with typed ``Overloaded`` instead of
+  growing the queue without bound;
+* deadlines fail expired requests with ``DeadlineExceeded`` instead of
+  occupying the executor;
+* a failed group retries, then bisects, so one poison request fails alone
+  while every batch-mate completes;
+* executor/compile failures carry (plan, bucket, dtype, batch) context;
+* ``close()`` is idempotent and post-close ``submit()`` raises
+  ``ServiceClosed``; concurrent submit/flush/close races resolve every
+  future exactly once;
+* the sharded router trips a per-shard circuit breaker, deterministically
+  reroutes the broken shard's groups to survivors (with cache rewarm),
+  readmits a recovered shard through a half-open probe, and surfaces all
+  of it in ``stats()`` — with zero hung futures throughout.
+
+Shard chaos runs on logical shards (the same CPU device repeated), so the
+whole suite is tier-1; the CI chaos job re-runs it on 8 forced host
+devices for real device separation.
+"""
+import threading
+import time
+import zlib
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import erode
+from repro.serve.morph import (
+    DeadlineExceeded,
+    ExecutorError,
+    FailoverPolicy,
+    FaultPlan,
+    InjectedFault,
+    MicroBatcher,
+    MorphService,
+    Overloaded,
+    PoisonedRequest,
+    RetryPolicy,
+    ServeError,
+    ServiceClosed,
+    ServiceConfig,
+    ShardUnavailable,
+    UnknownPlan,
+    get_plan,
+    single_op_plan,
+)
+from repro.shard import ShardedMorphService
+
+RNG = np.random.default_rng(11)
+
+
+def rand(h=40, w=50, dtype=np.uint8):
+    return RNG.integers(0, 255, (h, w), dtype=dtype)
+
+
+def fast_retry(max_retries=1):
+    return RetryPolicy(max_retries=max_retries, backoff_ms=0.5, backoff_cap_ms=2.0)
+
+
+def cfg(**kw):
+    kw.setdefault("buckets", ((64, 64),))
+    kw.setdefault("window_ms", 1.0)
+    kw.setdefault("retry", fast_retry())
+    return ServiceConfig(**kw)
+
+
+def poll_until(pred, timeout=20.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# ------------------------------------------------------------- typed errors
+def test_serve_error_carries_context():
+    e = ExecutorError("boom", plan="cleanup", bucket=(64, 64), dtype="uint8",
+                      batch=8, shard=3)
+    s = str(e)
+    for frag in ("cleanup", "(64, 64)", "uint8", "batch=8", "shard=3"):
+        assert frag in s
+    assert e.retryable
+    assert not Overloaded("x").retryable
+    assert not DeadlineExceeded("x").retryable
+    assert not PoisonedRequest("x", tag="t").retryable
+
+
+def test_unknown_plan_is_typed_and_keyerror():
+    with pytest.raises(UnknownPlan):
+        get_plan("no_such_plan")
+    with pytest.raises(KeyError):  # pre-resilience contract preserved
+        get_plan("no_such_plan")
+    with pytest.raises(ServeError, match="no_such_plan"):
+        get_plan("no_such_plan")
+
+
+def test_empty_bucket_ladder_rejected_at_construction():
+    with pytest.raises(ServeError, match="bucket"):
+        MorphService(ServiceConfig(buckets=()))
+
+
+# --------------------------------------------------------- admission control
+def test_overloaded_sheds_excess_load():
+    """With the worker pinned by injected latency, submits past max_queue
+    raise Overloaded; every accepted request still completes."""
+    c = cfg(max_queue=4, window_ms=200.0, max_batch=1,
+            faults=FaultPlan(latency_ms=30.0))
+    img = rand()
+    with MorphService(c) as svc:
+        accepted, rejected = [], 0
+        for _ in range(16):
+            try:
+                accepted.append(svc.submit(img, "erode", (3, 3)))
+            except Overloaded as e:
+                assert not e.retryable
+                rejected += 1
+        assert rejected > 0
+        for f in accepted:
+            assert f.result(timeout=60) is not None
+        stats = svc.stats()
+    assert stats["resilience"]["rejected_overloaded"] == rejected
+    assert stats["resilience"]["max_queue"] == 4
+    assert all(f.done() for f in accepted)
+
+
+def test_unbounded_queue_opt_out():
+    with MorphService(cfg(max_queue=None)) as svc:
+        futs = [svc.submit(rand(), "erode", (3, 3)) for _ in range(64)]
+        for f in futs:
+            f.result(timeout=60)
+        assert svc.stats()["resilience"]["rejected_overloaded"] == 0
+
+
+# ------------------------------------------------------------------ deadlines
+def test_deadline_already_expired_rejected_at_submit():
+    with MorphService(cfg()) as svc:
+        with pytest.raises(DeadlineExceeded, match="erode"):
+            svc.submit(rand(), "erode", (3, 3), deadline_ms=0)
+
+
+def test_deadline_expires_in_queue():
+    """A request stuck behind a slow dispatch fails typed when its deadline
+    passes, instead of hanging or occupying the executor."""
+    c = cfg(window_ms=0.0, max_batch=1, faults=FaultPlan(latency_ms=120.0),
+            retry=None)
+    with MorphService(c) as svc:
+        blocker = svc.submit(rand(), "erode", (3, 3))  # pins the worker
+        time.sleep(0.02)
+        doomed = svc.submit(rand(), "dilate", (3, 3), deadline_ms=5.0)
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=60)
+        blocker.result(timeout=60)
+        stats = svc.stats()
+    assert stats["resilience"]["deadline_expired"] >= 1
+
+
+def test_default_deadline_from_config():
+    c = cfg(window_ms=0.0, max_batch=1, default_deadline_ms=5.0,
+            faults=FaultPlan(latency_ms=120.0), retry=None)
+    with MorphService(c) as svc:
+        blocker = svc.submit(rand(), "erode", (3, 3), deadline_ms=10_000.0)
+        time.sleep(0.02)
+        doomed = svc.submit(rand(), "dilate", (3, 3))  # inherits 5 ms
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=60)
+        blocker.result(timeout=60)
+
+
+def test_urgent_deadline_pulls_group_dispatch_forward():
+    """A tight deadline overrides the batching window: the group dispatches
+    at the deadline, not window_ms later."""
+    with MorphService(cfg(window_ms=5000.0, adaptive_window=False)) as svc:
+        t0 = time.monotonic()
+        out = svc.run(rand(), "erode", (3, 3), deadline_ms=50.0)
+        assert out is not None  # completed, not expired
+        assert time.monotonic() - t0 < 4.0  # nowhere near the 5 s window
+
+
+# --------------------------------------------------- retry + batch isolation
+def test_retry_recovers_transient_fault():
+    img = rand()
+    c = cfg(max_batch=1, faults=FaultPlan(fail_after=0, fail_for=1),
+            retry=fast_retry(max_retries=2))
+    with MorphService(c) as svc:
+        got = svc.run(img, "erode", (3, 3))
+        stats = svc.stats()
+    np.testing.assert_array_equal(got, np.asarray(erode(img, (3, 3))))
+    assert stats["resilience"]["retries"] >= 1
+    assert stats["resilience"]["request_failures"] == 0
+    assert stats["resilience"]["faults"]["injected_faults"] == 1
+
+
+def test_retries_exhausted_gives_typed_error():
+    c = cfg(max_batch=1, faults=FaultPlan(fail_after=0, fail_for=None),
+            retry=fast_retry(max_retries=1))
+    with MorphService(c) as svc:
+        with pytest.raises(InjectedFault):
+            svc.run(rand(), "erode", (3, 3))
+        stats = svc.stats()
+    assert stats["resilience"]["request_failures"] == 1
+
+
+def test_bisection_isolates_poison_request():
+    """One poisoned request in a batch of 8: the seven batch-mates complete
+    bit-exact, the poison fails alone with PoisonedRequest."""
+    imgs = [rand(40 + i, 50) for i in range(8)]
+    c = cfg(max_batch=8, window_ms=500.0, adaptive_window=False,
+            faults=FaultPlan(poison_tags=frozenset({"bad"})),
+            retry=fast_retry(max_retries=0))
+    with MorphService(c) as svc:
+        futs = [
+            svc.submit(im, "erode", (3, 3), tag="bad" if i == 3 else None)
+            for i, im in enumerate(imgs)
+        ]
+        results = []
+        for i, f in enumerate(futs):
+            if i == 3:
+                with pytest.raises(PoisonedRequest) as ei:
+                    f.result(timeout=60)
+                assert ei.value.tag == "bad"
+                results.append(None)
+            else:
+                results.append(f.result(timeout=60))
+        stats = svc.stats()
+    for i, (im, got) in enumerate(zip(imgs, results)):
+        if i == 3:
+            continue
+        np.testing.assert_array_equal(got, np.asarray(erode(im, (3, 3))))
+    assert stats["resilience"]["bisections"] >= 1
+    assert stats["resilience"]["request_failures"] == 1
+    assert all(f.done() for f in futs)  # zero hung futures
+
+
+def test_injected_faults_are_deterministic():
+    """Same FaultPlan + same traffic -> identical injector trace."""
+    def run_once():
+        c = cfg(max_batch=1, faults=FaultPlan(fail_after=1, fail_for=2),
+                retry=fast_retry(max_retries=3))
+        with MorphService(c) as svc:
+            svc.run(rand(32, 32), "erode", (3, 3))
+            svc.run(rand(32, 32), "erode", (3, 3))
+            return svc.stats()["resilience"]["faults"]
+    a, b = run_once(), run_once()
+    assert a == b
+    assert a["injected_faults"] == 2
+
+
+def test_zero_overhead_when_faults_off():
+    with MorphService(cfg()) as svc:
+        assert svc._injector is None  # the off path is one None check
+        assert svc.stats()["resilience"]["faults"] is None
+
+
+# ------------------------------------------------------- typed executor errors
+def test_executor_error_carries_group_context():
+    """A real compile failure (Mosaic lowering on CPU) surfaces as
+    ExecutorError with (plan, bucket, dtype, batch) instead of a bare XLA
+    traceback."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("kernel backend compiles fine on TPU")
+    c = cfg(backend="kernel", interpret=False, max_batch=1,
+            retry=fast_retry(max_retries=0))
+    with MorphService(c) as svc:
+        with pytest.raises(ExecutorError) as ei:
+            svc.run(rand(), "erode", (3, 3))
+    e = ei.value
+    assert e.plan == "erode"
+    assert e.bucket == (64, 64)
+    assert e.dtype == "uint8"
+    assert e.batch == 1
+    assert e.__cause__ is not None  # original traceback chained
+
+
+# ------------------------------------------------------------ close semantics
+def test_close_is_idempotent_and_submit_after_close_raises():
+    svc = MorphService(cfg())
+    f = svc.submit(rand(), "erode", (3, 3))
+    svc.close()
+    f.result(timeout=60)  # close drains in-flight work
+    svc.close()  # double close: no-op, no error
+    with pytest.raises(ServiceClosed):
+        svc.submit(rand(), "erode", (3, 3))
+    with pytest.raises(RuntimeError):  # pre-resilience contract preserved
+        svc.submit(rand(), "erode", (3, 3))
+    assert svc.flush(timeout=1.0)  # drained service: flush trivially true
+
+
+def test_submit_during_drain_never_hangs():
+    """Submissions racing close() either complete or raise ServiceClosed —
+    no future is ever left pending."""
+    svc = MorphService(cfg(window_ms=5.0))
+    futs, closed_rejections = [], 0
+    stop = threading.Event()
+
+    def submitter():
+        nonlocal closed_rejections
+        while not stop.is_set():
+            try:
+                futs.append(svc.submit(rand(16, 16), "erode", (3, 3)))
+            except Overloaded:
+                time.sleep(0.005)  # backpressure: shed and retry
+            except ServiceClosed:
+                closed_rejections += 1
+                return
+
+    threads = [threading.Thread(target=submitter) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.1)
+    svc.close()
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    for f in futs:
+        f.result(timeout=60)  # accepted => served, even mid-drain
+    assert all(f.done() for f in futs)
+
+
+# -------------------------------------------------- batcher race stress test
+def test_batcher_concurrent_submit_flush_close_stress():
+    """Threaded barrier stress on MicroBatcher: every accepted request's
+    future resolves exactly once across concurrent submit + flush + close."""
+    resolved = []
+
+    class Req:
+        def __init__(self, i):
+            self.key = f"k{i % 3}"
+            self.future = Future()
+            self.i = i
+
+    def execute(key, reqs):
+        for r in reqs:
+            r.future.set_result(r.i)  # double-resolve would raise here
+            resolved.append(r.i)
+
+    b = MicroBatcher(execute, max_batch=8, window_s=0.002,
+                     max_queue=None, retry=RetryPolicy(max_retries=0))
+    n_threads, per_thread = 8, 50
+    barrier = threading.Barrier(n_threads)
+    accepted: list = []
+    lock = threading.Lock()
+    closed_at: list = []
+
+    def worker(t):
+        barrier.wait()
+        for i in range(per_thread):
+            req = Req(t * per_thread + i)
+            try:
+                b.submit(req)
+            except ServiceClosed:
+                closed_at.append(req.i)
+                return
+            with lock:
+                accepted.append(req)
+            if i % 10 == 0:
+                b.flush(timeout=5)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    b.close()  # races the submitters
+    for t in threads:
+        t.join(timeout=30)
+    b.close()  # idempotent under stress too
+    for req in accepted:
+        assert req.future.result(timeout=10) == req.i
+    # exactly once: every accepted id resolved, none twice
+    assert sorted(resolved) == sorted(r.i for r in accepted)
+    assert len(set(resolved)) == len(resolved)
+
+
+# ----------------------------------------------------------- sharded failover
+N_LOGICAL = 4
+
+
+def logical_devices(n=N_LOGICAL):
+    """n logical shards on whatever devices exist (repeats the first device
+    when the host has fewer — routing/failover logic is device-agnostic)."""
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(n)]
+
+
+def primary_index(plan_name, bucket, dtype_str, n):
+    token = f"{plan_name}|{bucket}|{dtype_str}".encode()
+    return zlib.crc32(token) % n
+
+
+ERODE5 = single_op_plan("erode", (5, 5))
+E5_PRIMARY = primary_index("erode", (64, 64), np.dtype(np.uint8).str, N_LOGICAL)
+
+
+def test_shard_failover_reroutes_and_completes_all():
+    """Kill one shard mid-traffic: every in-flight and subsequent request
+    completes (rerouted to survivors), stats() reports the shard unhealthy,
+    and no future hangs."""
+    c = cfg(window_ms=2.0,
+            retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(failure_threshold=1, probe_interval_s=600.0),
+            faults=FaultPlan(fail_shard=E5_PRIMARY, fail_after=0, fail_for=None))
+    imgs = [rand(40 + i, 50) for i in range(12)]
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        futs = [svc.submit_plan(im, ERODE5) for im in imgs]
+        results = [f.result(timeout=120) for f in futs]
+        # subsequent traffic routes straight to the survivor
+        late_img = rand()
+        late = svc.run_plan(late_img, ERODE5)
+        stats = svc.stats()
+    for im, got in zip(imgs, results):
+        np.testing.assert_array_equal(got, np.asarray(erode(im, (5, 5))))
+    np.testing.assert_array_equal(late, np.asarray(erode(late_img, (5, 5))))
+    assert all(f.done() for f in futs)
+    assert stats["healthy_shards"] == N_LOGICAL - 1
+    assert stats["health"][E5_PRIMARY]["state"] == "open"
+    assert stats["health"][E5_PRIMARY]["trips"] == 1
+    assert stats["resilience"]["reroutes"] >= len(imgs)
+    assert stats["resilience"]["failovers"] == 1
+
+
+def test_shard_failover_rewarms_survivor_cache():
+    c = cfg(window_ms=2.0,
+            retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(failure_threshold=1, probe_interval_s=600.0),
+            faults=FaultPlan(fail_shard=E5_PRIMARY, fail_after=0, fail_for=None))
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        svc.run_plan(rand(), ERODE5)  # trips the breaker, reroutes, rewarm fires
+        assert poll_until(
+            lambda: svc.stats()["resilience"]["rewarms"] >= 1, timeout=30
+        ), svc.stats()["resilience"]
+        stats = svc.stats()
+        # the deterministic survivor holds a compiled executable for the group
+        n = len(svc.shards)
+        survivors = [i for i in range(n) if i != E5_PRIMARY]
+        token = svc._token(ERODE5, (64, 64), np.dtype(np.uint8).str)
+        target = survivors[zlib.crc32(token) % len(survivors)]
+        assert svc.shards[target].cache.snapshot()["size"] >= 1
+    assert stats["resilience"]["rewarms"] >= 1
+
+
+def test_shard_recovery_via_half_open_probe():
+    """A shard that fails for a finite window is readmitted by a half-open
+    probe after probe_interval_s; stats() reports the recovery."""
+    c = cfg(window_ms=1.0,
+            retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(failure_threshold=1, probe_interval_s=0.15),
+            faults=FaultPlan(fail_shard=E5_PRIMARY, fail_after=0, fail_for=2))
+    img = rand()
+    ref = np.asarray(erode(img, (5, 5)))
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        # trip: dispatch 0 fails, reroutes, breaker opens
+        np.testing.assert_array_equal(svc.run_plan(img, ERODE5), ref)
+        assert svc.stats()["healthy_shards"] == N_LOGICAL - 1
+
+        def recovered():
+            np.testing.assert_array_equal(svc.run_plan(img, ERODE5), ref)
+            s = svc.stats()
+            return s["healthy_shards"] == N_LOGICAL
+        # probes burn through the remaining injected failure, then readmit
+        assert poll_until(recovered, timeout=60, interval=0.05)
+        stats = svc.stats()
+    h = stats["health"][E5_PRIMARY]
+    assert h["state"] == "closed"
+    assert h["probes"] >= 1
+    assert h["recoveries"] == 1
+
+
+def test_all_shards_down_is_typed_not_hung():
+    c = cfg(window_ms=1.0,
+            retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(failure_threshold=1, probe_interval_s=600.0),
+            faults=FaultPlan(fail_after=0, fail_for=None))  # every shard fails
+    with ShardedMorphService(c, devices=logical_devices(2)) as svc:
+        f = svc.submit_plan(rand(), ERODE5)
+        with pytest.raises((InjectedFault, ShardUnavailable)):
+            f.result(timeout=60)
+        assert f.done()
+        # subsequent submits reject typed too (both breakers open)
+        f2 = svc.submit_plan(rand(), ERODE5)
+        with pytest.raises((InjectedFault, ShardUnavailable)):
+            f2.result(timeout=60)
+
+
+def test_router_request_level_errors_do_not_trip_breaker():
+    """Poison and deadline failures indict the request, not the shard: the
+    breaker stays closed and traffic keeps flowing."""
+    c = cfg(window_ms=2.0,
+            retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(failure_threshold=1, probe_interval_s=600.0),
+            faults=FaultPlan(poison_tags=frozenset({"bad"})))
+    img = rand()
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        with pytest.raises(PoisonedRequest):
+            svc.run_plan(img, ERODE5, tag="bad")
+        with pytest.raises(DeadlineExceeded):
+            svc.run_plan(img, ERODE5, deadline_ms=0.0001)
+        got = svc.run_plan(img, ERODE5)  # service still healthy
+        stats = svc.stats()
+    np.testing.assert_array_equal(got, np.asarray(erode(img, (5, 5))))
+    assert stats["healthy_shards"] == N_LOGICAL
+    assert stats["resilience"]["failovers"] == 0
+
+
+def test_router_stats_surface_health_block():
+    with ShardedMorphService(cfg(), devices=logical_devices(2)) as svc:
+        svc.run_plan(rand(), ERODE5)
+        stats = svc.stats()
+    assert stats["shards"] == 2
+    assert stats["healthy_shards"] == 2
+    assert len(stats["health"]) == 2
+    for h in stats["health"]:
+        assert h["state"] == "closed"
+        assert set(h) == {"state", "consecutive_failures", "trips", "probes",
+                          "recoveries"}
+    for k in ("reroutes", "rewarms", "failovers", "retries", "bisections",
+              "rejected_overloaded", "deadline_expired", "request_failures"):
+        assert k in stats["resilience"]
+
+
+def test_router_close_idempotent_and_submit_after_close():
+    svc = ShardedMorphService(cfg(), devices=logical_devices(2))
+    svc.run_plan(rand(), ERODE5)
+    svc.close()
+    svc.close()
+    f = svc.submit_plan(rand(), ERODE5)
+    with pytest.raises(ServiceClosed):
+        f.result(timeout=60)
