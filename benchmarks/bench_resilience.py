@@ -44,6 +44,7 @@ import zlib
 import jax
 import numpy as np
 
+from benchmarks.common import p99_ms
 from repro import core
 from repro.serve.morph import (
     FailoverPolicy,
@@ -149,7 +150,7 @@ def run_scenario(
         "completed": completed,
         "failed_typed": failed,
         "img_s": round(len(imgs) / wall, 2),
-        "p99_ms": round(float(np.percentile(latencies, 99) * 1e3), 2),
+        "p99_ms": round(p99_ms(latencies), 2),
         "healthy_shards": stats["healthy_shards"],
         "reroutes": stats["resilience"]["reroutes"],
         "rewarms": stats["resilience"]["rewarms"],

@@ -30,6 +30,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import p99_ms
 from repro.data.images import cleanup_batch
 from repro.serve.morph import MorphService, ServiceConfig
 
@@ -81,9 +82,9 @@ def bench_direct(streams: list[list[np.ndarray]]) -> tuple[float, float, float, 
     wall_warm = time.perf_counter() - t0
     return (
         n / wall,
-        float(np.percentile(per_call, 99) * 1e3),
+        p99_ms(per_call),
         n / wall_warm,
-        float(np.percentile(per_warm, 99) * 1e3),
+        p99_ms(per_warm),
     )
 
 
@@ -114,7 +115,7 @@ def bench_serve(
                 f.result()
         wall = time.perf_counter() - t0
         stats = svc.stats()
-    p99 = float(np.percentile(latencies, 99) * 1e3) if latencies else 0.0
+    p99 = p99_ms(latencies)
     return n / wall, p99, stats
 
 

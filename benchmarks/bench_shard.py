@@ -26,23 +26,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 import numpy as np
 
+from benchmarks.common import time_fn_amortized as _time
+
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "BENCH_shard.json")
 
-
-def _time(fn, *args, reps: int = 5) -> float:
-    import jax
-
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
 
 
 def _cases(smoke: bool):

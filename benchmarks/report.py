@@ -178,6 +178,30 @@ def resilience_table(path: str) -> str:
     return "\n".join(out)
 
 
+def obs_table(path: str) -> str:
+    with open(path) as f:
+        d = json.load(f)
+    out = ["### Observability overhead (tracing + executor profiling, "
+           "BENCH_serve traffic mix)", "",
+           "| concurrency | obs off img/s | obs on img/s | A/A noise ratio | "
+           "enabled overhead | off p99 ms | on p99 ms |",
+           "|---|---|---|---|---|---|---|"]
+    for r in d["overhead"]:
+        out.append(
+            f"| {r['concurrency']} | {r['off_img_s']} | {r['on_img_s']} "
+            f"| {r['disabled_aa_ratio']} | **{r['enabled_overhead']}x** "
+            f"| {r['off_p99_ms']} | {r['on_p99_ms']} |")
+    c = d["chaos_trace"]
+    out.append("")
+    out.append(
+        f"chaos replay (faulted shard + poison request, {c['shards']} shards): "
+        f"{c['completed']}/{c['requests']} completed, "
+        f"{c['events']} trace events over spans {', '.join(c['span_names'])}; "
+        f"{c['validation_errors']} schema errors, {c['open_spans']} unclosed "
+        f"spans. Load `{c['trace_file']}` at ui.perfetto.dev.")
+    return "\n".join(out)
+
+
 def roofline_table(path: str) -> str:
     with open(path) as f:
         rows = json.load(f)
@@ -237,6 +261,10 @@ def main():
         parts.append(resilience_table(f"{base}/BENCH_resilience.json"))
     except FileNotFoundError:
         parts.append("resilience results missing (run benchmarks.bench_resilience)")
+    try:
+        parts.append(obs_table(f"{base}/BENCH_obs.json"))
+    except FileNotFoundError:
+        parts.append("observability results missing (run benchmarks.bench_obs)")
     try:
         parts.append(roofline_table(f"{base}/roofline.json"))
     except FileNotFoundError:

@@ -65,6 +65,10 @@ class CheckpointManager:
             os.makedirs(tmp, exist_ok=True)
             np.savez(os.path.join(tmp, f"host_{self.process_index}.npz"), **flat)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                # wall-clock time is correct here (and only here): manifest
+                # timestamps identify checkpoints across process restarts,
+                # which a monotonic/perf counter cannot do. Durations
+                # elsewhere use time.perf_counter (repro.obs.now_s).
                 json.dump({"step": step, "time": time.time(),
                            "n_leaves": len(flat)}, f)
             if os.path.exists(path):

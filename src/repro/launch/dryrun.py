@@ -267,12 +267,14 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool) -> dict:
         cell.update(status="skipped", reason=why)
         return cell
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    # durations use the monotonic perf counter (repro.obs.now_s convention);
+    # wall-clock is reserved for checkpoint metadata
+    t0 = time.perf_counter()
     try:
         lowered = lower_cell(arch, shape, mesh)
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        t2 = time.time()
+        t2 = time.perf_counter()
         cell.update(
             status="ok",
             lower_s=round(t1 - t0, 1),

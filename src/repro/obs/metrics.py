@@ -1,0 +1,278 @@
+"""Metrics registry: counters, gauges, fixed-bucket histograms (ISSUE 7).
+
+The serving tier grew five hand-rolled stats surfaces (``ExecutableCache``
+counters, ``MicroBatcher.counters()``, ``ServiceStats`` deques, the sharded
+router's key-by-key merge, and each benchmark's private percentile math).
+This module is the one vocabulary they all become views over:
+
+* :class:`Counter` — a monotone int. Merge = sum.
+* :class:`Gauge` — a point-in-time value with an explicit merge ``mode``:
+  ``"sum"`` for capacities (cache sizes add across shards), ``"max"`` for
+  worst-shard readings (effective batching window), ``"min"`` symmetric.
+* :class:`Histogram` — fixed bucket boundaries chosen at registration, so
+  two histograms of the same metric merge by adding bucket counts — the
+  property the cross-shard quantile merge needs (quantiles themselves never
+  merge; see :meth:`Histogram.quantile`).
+
+Mutation is deliberately lock-free: every producer in the serving tier
+already serializes its hot path under an existing lock (the cache lock, the
+batcher cv, the stats lock), and telemetry that *loses* a rare increment
+under a data race is acceptable where telemetry that *takes another lock*
+per request is not. Snapshots are plain dicts (JSON-ready) and
+:func:`merge_snapshots` merges any number of them by metric type — the
+replacement for the router's hand-coded per-key aggregation.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+
+# Latency bucket ladder (milliseconds), log-spaced ~x2: fine enough that a
+# p99 read off the histogram tracks np.percentile within a bucket width,
+# coarse enough that a snapshot is ~30 ints. Shared by the serving stats and
+# benchmarks/common.py so live stats and bench reports quantize identically.
+DEFAULT_LATENCY_BUCKETS_MS: tuple[float, ...] = (
+    0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 3.0, 5.0, 7.5, 10.0, 15.0, 20.0, 30.0,
+    50.0, 75.0, 100.0, 150.0, 200.0, 300.0, 500.0, 750.0, 1000.0, 1500.0,
+    2000.0, 3000.0, 5000.0, 10000.0, 30000.0,
+)
+
+# Power-of-two ladder for batch sizes and iteration counts.
+POW2_BUCKETS: tuple[float, ...] = tuple(float(1 << i) for i in range(11))
+
+
+def hit_rate(hits: int, misses: int) -> float:
+    """The one definition of a hit rate (was copy-pasted between
+    ``ExecutableCache.snapshot`` and the router's summed-counter re-derivation)."""
+    total = hits + misses
+    return hits / total if total else 0.0
+
+
+def cache_stats(size: int, hits: int, misses: int, evictions: int) -> dict:
+    """The executable-cache stats block, derived the same way whether the
+    inputs are one service's counters or a cross-shard merged sum."""
+    return {
+        "size": int(size),
+        "hits": int(hits),
+        "misses": int(misses),
+        "evictions": int(evictions),
+        "hit_rate": hit_rate(hits, misses),
+    }
+
+
+class Counter:
+    """Monotone event count. ``inc`` is a bare int add — callers serialize
+    on their own hot-path lock; merge = sum."""
+
+    kind = "counter"
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def snapshot(self) -> dict:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    """Point-in-time reading with explicit cross-shard merge semantics."""
+
+    kind = "gauge"
+    __slots__ = ("value", "mode")
+    MODES = ("sum", "max", "min", "last")
+
+    def __init__(self, mode: str = "last"):
+        if mode not in self.MODES:
+            raise ValueError(f"gauge mode must be one of {self.MODES}, got {mode!r}")
+        self.mode = mode
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def snapshot(self) -> dict:
+        return {"type": "gauge", "mode": self.mode, "value": self.value}
+
+
+class Histogram:
+    """Fixed-boundary histogram: ``bounds`` are upper edges of the first
+    ``len(bounds)`` buckets plus one overflow bucket. Tracks sum/count and
+    exact min/max so quantile reads are tight at the tails.
+    """
+
+    kind = "histogram"
+    __slots__ = ("bounds", "counts", "total", "count", "min", "max")
+
+    def __init__(self, bounds=DEFAULT_LATENCY_BUCKETS_MS):
+        bounds = tuple(float(b) for b in bounds)
+        if not bounds or list(bounds) != sorted(set(bounds)):
+            raise ValueError("histogram bounds must be non-empty and strictly increasing")
+        self.bounds = bounds
+        self.counts = [0] * (len(bounds) + 1)
+        self.total = 0.0
+        self.count = 0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.total += v
+        self.count += 1
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def observe_many(self, values) -> None:
+        for v in values:
+            self.observe(v)
+
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        return quantile_from_snapshot(self.snapshot(), q)
+
+    def snapshot(self) -> dict:
+        return {
+            "type": "histogram",
+            "bounds": list(self.bounds),
+            "counts": list(self.counts),
+            "sum": self.total,
+            "count": self.count,
+            "min": self.min if self.count else 0.0,
+            "max": self.max if self.count else 0.0,
+        }
+
+
+def quantile_from_snapshot(snap: dict, q: float) -> float:
+    """Quantile estimate from a histogram *snapshot* (local or merged):
+    find the bucket holding rank ``q`` and interpolate linearly inside it,
+    clamped to the recorded min/max so the tails never extrapolate past
+    observed data. Empty histograms read 0.0."""
+    if snap.get("type") != "histogram":
+        raise TypeError(f"need a histogram snapshot, got {snap.get('type')!r}")
+    count = snap["count"]
+    if not count:
+        return 0.0
+    bounds, counts = snap["bounds"], snap["counts"]
+    lo_all, hi_all = snap["min"], snap["max"]
+    rank = q * (count - 1)
+    seen = 0
+    for i, c in enumerate(counts):
+        if not c:
+            continue
+        if seen + c > rank:
+            lo = bounds[i - 1] if i > 0 else lo_all
+            hi = bounds[i] if i < len(bounds) else hi_all
+            lo, hi = max(lo, lo_all), min(hi, hi_all)
+            if hi <= lo:
+                return lo
+            frac = (rank - seen + 0.5) / c  # mid-rank within the bucket
+            return lo + min(1.0, max(0.0, frac)) * (hi - lo)
+        seen += c
+    return hi_all
+
+
+def _merge_one(kind: str, snaps: list[dict]) -> dict:
+    if kind == "counter":
+        return {"type": "counter", "value": sum(s["value"] for s in snaps)}
+    if kind == "gauge":
+        mode = snaps[0]["mode"]
+        vals = [s["value"] for s in snaps]
+        if any(s["mode"] != mode for s in snaps):
+            raise ValueError("cannot merge gauges with different modes")
+        v = {"sum": sum, "max": max, "min": min, "last": lambda x: x[-1]}[mode](vals)
+        return {"type": "gauge", "mode": mode, "value": v}
+    if kind == "histogram":
+        bounds = snaps[0]["bounds"]
+        if any(s["bounds"] != bounds for s in snaps):
+            raise ValueError("cannot merge histograms with different bounds")
+        counted = [s for s in snaps if s["count"]]
+        return {
+            "type": "histogram",
+            "bounds": list(bounds),
+            "counts": [sum(c) for c in zip(*(s["counts"] for s in snaps))],
+            "sum": sum(s["sum"] for s in snaps),
+            "count": sum(s["count"] for s in snaps),
+            "min": min(s["min"] for s in counted) if counted else 0.0,
+            "max": max(s["max"] for s in counted) if counted else 0.0,
+        }
+    raise ValueError(f"unknown metric type {kind!r}")
+
+
+def merge_snapshots(snapshots: list[dict]) -> dict:
+    """Merge registry snapshots by metric type: counters sum, gauges apply
+    their mode, histograms add bucket counts. A metric missing from some
+    shards merges over the shards that have it."""
+    merged: dict[str, dict] = {}
+    names: list[str] = []
+    for snap in snapshots:
+        for name in snap:
+            if name not in merged:
+                merged[name] = {}
+                names.append(name)
+    for name in names:
+        present = [s[name] for s in snapshots if name in s]
+        kinds = {p["type"] for p in present}
+        if len(kinds) != 1:
+            raise ValueError(f"metric {name!r} has conflicting types {kinds}")
+        merged[name] = _merge_one(kinds.pop(), present)
+    return merged
+
+
+class MetricsRegistry:
+    """Named metrics, registered on first use. Registration takes a lock
+    (rare); mutation of the returned metric objects does not (hot)."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, factory, kind: str):
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = factory()
+                    self._metrics[name] = m
+        if m.kind != kind:
+            raise TypeError(f"metric {name!r} is a {m.kind}, not a {kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter, "counter")
+
+    def gauge(self, name: str, mode: str = "last") -> Gauge:
+        return self._get(name, lambda: Gauge(mode), "gauge")
+
+    def histogram(self, name: str, bounds=DEFAULT_LATENCY_BUCKETS_MS) -> Histogram:
+        return self._get(name, lambda: Histogram(bounds), "histogram")
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            items = list(self._metrics.items())
+        return {name: m.snapshot() for name, m in items}
+
+    # alias so call sites read as the class-level operation it is
+    merge = staticmethod(merge_snapshots)
+
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS_MS",
+    "POW2_BUCKETS",
+    "hit_rate",
+    "cache_stats",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "quantile_from_snapshot",
+    "merge_snapshots",
+    "MetricsRegistry",
+]

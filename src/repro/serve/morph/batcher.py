@@ -34,11 +34,13 @@ added latency; saturated ones to full-window occupancy.
 """
 from __future__ import annotations
 
+import contextlib
 import queue
 import threading
 import time
 from typing import Any, Callable
 
+from repro.obs import MetricsRegistry
 from repro.serve.morph.resilience import (
     DeadlineExceeded,
     Overloaded,
@@ -71,6 +73,8 @@ class MicroBatcher:
         max_queue: int | None = None,
         retry: RetryPolicy | None = None,
         name: str = "morph-batcher",
+        registry: MetricsRegistry | None = None,
+        obs=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -92,13 +96,15 @@ class MicroBatcher:
         self._cv = threading.Condition()
         self._outstanding = 0
         self._closed = False
-        # resilience counters (worker/submit threads; ints under the cv lock
-        # or the worker thread only — snapshot() reads under the lock)
-        self.rejected = 0          # Overloaded submits
-        self.expired = 0           # requests failed with DeadlineExceeded
-        self.retries = 0           # re-dispatches of a failed group
-        self.bisections = 0        # group splits after retries ran out
-        self.request_failures = 0  # futures resolved with an exception
+        self._obs = obs  # repro.obs.Observability or None (zero-overhead off)
+        # resilience counters (worker/submit threads; registry counters
+        # mutated under the cv lock or the worker thread only)
+        reg = registry if registry is not None else MetricsRegistry()
+        self._rejected = reg.counter("batcher.rejected_overloaded")
+        self._expired = reg.counter("batcher.deadline_expired")
+        self._retries = reg.counter("batcher.retries")
+        self._bisections = reg.counter("batcher.bisections")
+        self._request_failures = reg.counter("batcher.request_failures")
         self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
         self._thread.start()
 
@@ -111,7 +117,7 @@ class MicroBatcher:
             if self._closed:
                 raise ServiceClosed("service is closed; submit() rejected")
             if self.max_queue is not None and self._outstanding >= self.max_queue:
-                self.rejected += 1
+                self._rejected.inc()
                 raise Overloaded(
                     f"submit queue full ({self._outstanding} outstanding, "
                     f"max_queue={self.max_queue})"
@@ -138,11 +144,11 @@ class MicroBatcher:
     def counters(self) -> dict:
         with self._cv:
             return {
-                "rejected_overloaded": self.rejected,
-                "deadline_expired": self.expired,
-                "retries": self.retries,
-                "bisections": self.bisections,
-                "request_failures": self.request_failures,
+                "rejected_overloaded": self._rejected.value,
+                "deadline_expired": self._expired.value,
+                "retries": self._retries.value,
+                "bisections": self._bisections.value,
+                "request_failures": self._request_failures.value,
             }
 
     # ---------------------------------------------------------- worker loop
@@ -226,10 +232,12 @@ class MicroBatcher:
     # ------------------------------------------------------ failure handling
     def _fail(self, reqs: list, exc: BaseException) -> None:
         for r in reqs:
+            if self._obs is not None:
+                self._obs.request_failed(r, exc)  # close queue spans
             if not r.future.done():
                 r.future.set_exception(exc)
         with self._cv:
-            self.request_failures += len(reqs)
+            self._request_failures.inc(len(reqs))
 
     def _drop_expired(self, reqs: list) -> list:
         now = time.monotonic()
@@ -243,7 +251,7 @@ class MicroBatcher:
                 live.append(r)
         if expired:
             with self._cv:
-                self.expired += len(expired)
+                self._expired.inc(len(expired))
             self._fail(
                 expired,
                 DeadlineExceeded(
@@ -260,14 +268,23 @@ class MicroBatcher:
         attempts = 1 + (policy.max_retries if policy else 0)
         last: BaseException | None = None
         for attempt in range(attempts):
+            span = contextlib.nullcontext()
+            backoff = 0.0
             if attempt:
                 with self._cv:
-                    self.retries += 1
+                    self._retries.inc()
                 backoff = policy.backoff_s(attempt - 1)
-                if backoff > 0:
-                    time.sleep(backoff)
+                if self._obs is not None:
+                    # the retry span covers backoff sleep + re-dispatch, so
+                    # chaos traces show where a retried request's time went
+                    span = self._obs.group_span(
+                        "retry", reqs, attempt=attempt, backoff_ms=backoff * 1e3
+                    )
             try:
-                self._execute(key, reqs)
+                with span:
+                    if backoff > 0:
+                        time.sleep(backoff)
+                    self._execute(key, reqs)
                 return None
             except BaseException as exc:  # noqa: BLE001 — classified below
                 last = exc
@@ -288,12 +305,21 @@ class MicroBatcher:
             self._fail(reqs, exc)
             return
         with self._cv:
-            self.bisections += 1
+            self._bisections.inc()
         mid = len(reqs) // 2
+        span = (
+            self._obs.group_span(
+                "bisect", reqs, left=mid, right=len(reqs) - mid,
+                error=type(exc).__name__,
+            )
+            if self._obs is not None
+            else contextlib.nullcontext()
+        )
         # halves dispatch without further retries: the top-level retry
         # already ran, and O(log n) isolation must stay O(log n) dispatches
-        self._run_group(key, reqs[:mid], retry=False)
-        self._run_group(key, reqs[mid:], retry=False)
+        with span:
+            self._run_group(key, reqs[:mid], retry=False)
+            self._run_group(key, reqs[mid:], retry=False)
 
     def _dispatch(self, key, reqs: list) -> None:
         try:

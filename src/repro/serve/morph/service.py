@@ -15,6 +15,16 @@ the same executor cache. The executable cache is keyed on
 ``(plan, shape, dtype, batch-bucket, policy.cache_token(), backend,
 interpret)`` with hit/miss/eviction counters; batch sizes are bucketed to
 powers of two so B-variance cannot silently multiply compiles.
+
+Observability (ISSUE 7, ``repro.obs``): every counter/latency surface here
+is a view over one :class:`~repro.obs.MetricsRegistry` per service —
+``stats()`` derives its dict from registry metrics, and the sharded router
+merges registries by metric type instead of re-aggregating stats dicts.
+Passing ``ServiceConfig(obs=ObsConfig())`` additionally turns on
+per-request tracing (trace ID minted at submit, spans over queue wait /
+dispatch / executor, exported via :meth:`MorphService.export_trace` as
+Chrome trace-event JSON) and executor profiling (compile-vs-run split per
+cache key); ``obs=None`` (default) costs one ``is None`` check per hook.
 """
 from __future__ import annotations
 
@@ -31,6 +41,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import DispatchPolicy, resolve_interpret
+from repro.obs import (
+    MetricsRegistry,
+    Observability,
+    ObsConfig,
+    POW2_BUCKETS,
+    cache_stats,
+    chrome_trace,
+    quantile_from_snapshot,
+)
 from repro.serve.morph.batcher import MicroBatcher
 from repro.serve.morph.buckets import (
     DEFAULT_BUCKETS,
@@ -68,71 +87,94 @@ class ExecutableCache:
 
     One entry == one compile of one executable (keys include the padded
     batch size), so ``misses`` is exactly the compile count the service has
-    paid — the number the bucket ladder exists to keep small.
+    paid — the number the bucket ladder exists to keep small. Counters are
+    registry metrics (``cache.*``) so shard merges sum them by type.
     """
 
-    def __init__(self, max_size: int = 128):
+    def __init__(self, max_size: int = 128, registry: MetricsRegistry | None = None):
         self.max_size = max_size
         self._entries: collections.OrderedDict = collections.OrderedDict()
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        reg = registry if registry is not None else MetricsRegistry()
+        self._hits = reg.counter("cache.hits")
+        self._misses = reg.counter("cache.misses")
+        self._evictions = reg.counter("cache.evictions")
+        self._size = reg.gauge("cache.size", mode="sum")
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
 
     def get(self, key, builder):
         with self._lock:
             if key in self._entries:
-                self.hits += 1
+                self._hits.inc()
                 self._entries.move_to_end(key)
                 return self._entries[key]
-            self.misses += 1
+            self._misses.inc()
         value = builder()  # build outside the lock; benign duplicate on race
         with self._lock:
             self._entries[key] = value
             self._entries.move_to_end(key)
             while len(self._entries) > self.max_size:
                 self._entries.popitem(last=False)
-                self.evictions += 1
+                self._evictions.inc()
+            self._size.set(len(self._entries))
         return value
 
     def snapshot(self) -> dict:
         with self._lock:
-            total = self.hits + self.misses
-            return {
-                "size": len(self._entries),
-                "hits": self.hits,
-                "misses": self.misses,
-                "evictions": self.evictions,
-                "hit_rate": self.hits / total if total else 0.0,
-            }
+            return cache_stats(
+                len(self._entries), self.hits, self.misses, self.evictions
+            )
 
 
 class ServiceStats:
-    """Rolling serving metrics: throughput, latency quantiles, occupancy."""
+    """Rolling serving metrics: throughput, latency quantiles, occupancy.
 
-    def __init__(self, window: int = 4096):
+    Latencies and batch sizes are fixed-bucket registry histograms
+    (``latency_ms``, ``batch_size``): p50/p99 read off the histogram, which
+    is what makes the sharded router's cross-shard quantiles well-defined
+    (bucket counts add; percentiles never would). Only the throughput
+    timestamps stay a rolling deque — img/s needs real arrival times.
+    """
+
+    def __init__(self, window: int = 4096, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
         self._lock = threading.Lock()
-        self._latencies = collections.deque(maxlen=window)
         self._done_ts = collections.deque(maxlen=window)
-        self._batch_sizes = collections.deque(maxlen=window)
-        self.requests = 0
-        self.batches = 0
-        self.tiled_requests = 0
+        self._requests = self.registry.counter("requests")
+        self._batches = self.registry.counter("batches")
+        self._tiled = self.registry.counter("tiled_requests")
+        self._latency = self.registry.histogram("latency_ms")
+        self._batch_sizes = self.registry.histogram("batch_size", POW2_BUCKETS)
         # convergence telemetry from BoundedIter plans (reconstruction):
         # budget is the fixed-trace iteration cap, used what actually ran
         # before the predicated scan converged (interp.py) — the gap is
-        # work the convergence-aware serving satellite reclaims.
-        self.bounded_execs = 0
-        self.iters_used_total = 0
-        self.iters_budget_total = 0
+        # work the convergence-aware serving path reclaims.
+        self._bounded_execs = self.registry.counter("bounded_iter.executions")
+        self._iters_used = self.registry.counter("bounded_iter.iters_used")
+        self._iters_budget = self.registry.counter("bounded_iter.iters_budget")
+
+    @property
+    def requests(self) -> int:
+        return self._requests.value
 
     def record_batch(self, latencies_s) -> None:
         now = time.monotonic()
         with self._lock:
-            self.requests += len(latencies_s)
-            self.batches += 1
-            self._batch_sizes.append(len(latencies_s))
-            self._latencies.extend(latencies_s)
+            self._requests.inc(len(latencies_s))
+            self._batches.inc()
+            self._batch_sizes.observe(len(latencies_s))
+            self._latency.observe_many([l * 1e3 for l in latencies_s])
             self._done_ts.extend([now] * len(latencies_s))
 
     def record_tiled(self, latencies_s) -> None:
@@ -140,32 +182,33 @@ class ServiceStats:
         latency/throughput but keep them out of the occupancy metrics."""
         now = time.monotonic()
         with self._lock:
-            self.requests += len(latencies_s)
-            self.tiled_requests += len(latencies_s)
-            self._latencies.extend(latencies_s)
+            self._requests.inc(len(latencies_s))
+            self._tiled.inc(len(latencies_s))
+            self._latency.observe_many([l * 1e3 for l in latencies_s])
             self._done_ts.extend([now] * len(latencies_s))
 
     def record_bounded(self, used: int, budget: int) -> None:
         with self._lock:
-            self.bounded_execs += 1
-            self.iters_used_total += int(used)
-            self.iters_budget_total += int(budget)
+            self._bounded_execs.inc()
+            self._iters_used.inc(int(used))
+            self._iters_budget.inc(int(budget))
 
     def snapshot(self, max_batch: int) -> dict:
         with self._lock:
-            lat = np.asarray(self._latencies, dtype=np.float64)
             ts = list(self._done_ts)
-            sizes = np.asarray(self._batch_sizes, dtype=np.float64)
+            lat = self._latency.snapshot()
+            sizes = self._batch_sizes.snapshot()
             # copy under the lock: used/budget must come from one
             # record_bounded or the derived ratio can tear
-            bounded_execs = self.bounded_execs
-            iters_used = self.iters_used_total
-            iters_budget = self.iters_budget_total
+            bounded_execs = self._bounded_execs.value
+            iters_used = self._iters_used.value
+            iters_budget = self._iters_budget.value
         span = (ts[-1] - ts[0]) if len(ts) > 1 else 0.0
+        mean_batch = sizes["sum"] / sizes["count"] if sizes["count"] else 0.0
         return {
-            "requests": self.requests,
-            "batches": self.batches,
-            "tiled_requests": self.tiled_requests,
+            "requests": self._requests.value,
+            "batches": self._batches.value,
+            "tiled_requests": self._tiled.value,
             "bounded_iter": {
                 "executions": bounded_execs,
                 "iters_used": iters_used,
@@ -175,10 +218,10 @@ class ServiceStats:
                 ),
             },
             "img_per_s": (len(ts) - 1) / span if span > 0 else 0.0,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
-            "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
-            "occupancy": float(sizes.mean()) / max_batch if sizes.size else 0.0,
+            "p50_ms": quantile_from_snapshot(lat, 0.50),
+            "p99_ms": quantile_from_snapshot(lat, 0.99),
+            "mean_batch": float(mean_batch),
+            "occupancy": float(mean_batch) / max_batch,
         }
 
 
@@ -205,6 +248,9 @@ class ServiceConfig:
     # router (repro.shard.router) runs each shard's batcher under its own
     # mesh slot. None = the process default device.
     device: Any = None
+    # This service's shard index under a sharded router (labels trace
+    # lanes and error context); None for a standalone service.
+    shard: int | None = None
     # --- resilience (resilience.py) ---------------------------------------
     # Admission bound on outstanding (queued + in-flight) requests; submit()
     # raises Overloaded past it. None = unbounded (the pre-resilience mode).
@@ -219,6 +265,9 @@ class ServiceConfig:
     failover: FailoverPolicy = FailoverPolicy()
     # Deterministic fault injection; None (default) adds zero overhead.
     faults: FaultPlan | None = None
+    # Observability (repro.obs): tracing + executor profiling; None
+    # (default) adds zero overhead, same contract as ``faults``.
+    obs: ObsConfig | None = None
 
 
 @dataclasses.dataclass
@@ -231,6 +280,8 @@ class _Request:
     t_submit: float
     deadline: float | None = None  # absolute monotonic seconds
     tag: str | None = None  # caller label; fault injection poisons by tag
+    trace: int | None = None  # obs: request trace ID (minted at submit)
+    qspan: Any = None  # obs: open queue-wait span handle
 
 
 class MorphService:
@@ -254,11 +305,24 @@ class MorphService:
         else:
             # fail loudly at construction, not inside the batcher thread
             self.backend = check_backend(self.config.backend)
-        self.cache = ExecutableCache(self.config.cache_size)
-        self._stats = ServiceStats(self.config.stats_window)
+        self.metrics = MetricsRegistry()
+        self.cache = ExecutableCache(self.config.cache_size, registry=self.metrics)
+        self._stats = ServiceStats(self.config.stats_window, registry=self.metrics)
         faults = self.config.faults
         self._injector = (
             FaultInjector(faults) if faults is not None and faults.enabled else None
+        )
+        obs_cfg = self.config.obs
+        shard = self.config.shard
+        self._obs = (
+            Observability(
+                obs_cfg,
+                self.metrics,
+                pid="0" if shard is None else str(shard),
+                name="service" if shard is None else f"shard-{shard}",
+            )
+            if obs_cfg is not None and obs_cfg.enabled
+            else None
         )
         self._batcher = MicroBatcher(
             self._execute_group,
@@ -268,6 +332,8 @@ class MorphService:
             min_window_s=self.config.min_window_ms / 1e3,
             max_queue=self.config.max_queue,
             retry=self.config.retry,
+            registry=self.metrics,
+            obs=self._obs,
         )
 
     # ------------------------------------------------------------ submission
@@ -282,6 +348,7 @@ class MorphService:
         *,
         deadline_ms: float | None = None,
         tag: str | None = None,
+        _trace: int | None = None,
     ) -> Future:
         """Plan request; resolves to an array (single-output plans) or a
         ``{name: array}`` dict (plans with named outputs).
@@ -291,7 +358,8 @@ class MorphService:
         :class:`DeadlineExceeded` instead of occupying the executor, and an
         urgent request pulls its whole group's dispatch forward. ``tag`` is
         a caller label carried on the request (fault injection poisons by
-        tag; it never affects routing or batching)."""
+        tag; it never affects routing or batching). ``_trace`` is internal:
+        the sharded router threads one trace ID through failover hops."""
         plan = get_plan(plan)
         img = np.asarray(img)
         if img.ndim != 2:
@@ -316,8 +384,17 @@ class MorphService:
         else:
             key = ("bucket", plan, bucket, img.dtype.str)
         req = _Request(key, img, plan, bucket, Future(), time.monotonic(),
-                       deadline=deadline, tag=tag)
-        self._batcher.submit(req)
+                       deadline=deadline, tag=tag, trace=_trace)
+        if self._obs is not None:
+            self._obs.request_submitted(req, plan.name, bucket, img.dtype.str)
+        try:
+            self._batcher.submit(req)
+        except ServeError as exc:
+            # rejected at admission (Overloaded / ServiceClosed): the queue
+            # span must still close exactly once
+            if self._obs is not None:
+                self._obs.request_failed(req, exc)
+            raise
         return req.future
 
     def submit_expr(self, img, expr, name: str | None = None, **kw) -> Future:
@@ -346,8 +423,8 @@ class MorphService:
         return [f.result() for f in futures]
 
     # ------------------------------------------------------------- execution
-    def _executor_for(self, plan: Plan, shape: tuple[int, int], dtype, batch: int):
-        key = (
+    def _executor_key(self, plan: Plan, shape: tuple[int, int], dtype, batch: int):
+        return (
             plan,
             shape,
             np.dtype(dtype).str,
@@ -356,16 +433,24 @@ class MorphService:
             self.backend,
             self.interpret,
         )
-        return self.cache.get(
-            key,
-            lambda: build_executor(
+
+    def _executor_for(self, plan: Plan, shape: tuple[int, int], dtype, batch: int):
+        key = self._executor_key(plan, shape, dtype, batch)
+
+        def build():
+            if self._obs is not None:
+                # the key's next call pays the XLA compile (profiled as the
+                # compile-vs-run split)
+                self._obs.executor_built(key)
+            return build_executor(
                 plan,
                 backend=self.backend,
                 policy=self.policy,
                 interpret=self.interpret,
                 with_aux=True,
-            ),
-        )
+            )
+
+        return self.cache.get(key, build)
 
     def _device_scope(self):
         if self.config.device is None:
@@ -373,7 +458,17 @@ class MorphService:
         return jax.default_device(self.config.device)
 
     def _execute_group(self, key, reqs: list) -> None:
-        with self._device_scope():
+        obs = self._obs
+        if obs is not None:
+            for r in reqs:
+                obs.request_dequeued(r)  # queue wait ends here (idempotent)
+            span = obs.group_span(
+                "dispatch", reqs, kind=key[0], plan=key[1].name,
+                shard=self.config.shard,
+            )
+        else:
+            span = contextlib.nullcontext()
+        with span, self._device_scope():
             if key[0] == "tiled":
                 self._execute_tiled(reqs)
             else:
@@ -383,9 +478,12 @@ class MorphService:
         budget = int(aux["iters_budget"])
         if budget:
             self._stats.record_bounded(int(aux["iters_used"]), budget)
+            if self._obs is not None:
+                self._obs.record_bounded(int(aux["iters_used"]), budget)
 
     def _execute_bucketed(self, key, reqs: list) -> None:
         _, plan, bucket, _ = key
+        obs = self._obs
         if self._injector is not None:
             self._injector.before_dispatch(reqs)
         bb = min(_round_up_pow2(len(reqs)), self.config.max_batch)
@@ -397,8 +495,26 @@ class MorphService:
             rects[i] = valid_rect(h, w)
         try:
             execute = self._executor_for(plan, bucket, batch.dtype, bb)
-            outs, aux = execute(jnp.asarray(batch), jnp.asarray(rects))
-            outs = {k: np.asarray(v) for k, v in outs.items()}
+            if obs is not None:
+                span = obs.group_span(
+                    "executor", reqs, plan=plan.name, bucket=bucket,
+                    dtype=np.dtype(batch.dtype).name, batch=bb,
+                    shard=self.config.shard,
+                )
+                t0 = time.perf_counter()
+            else:
+                span = contextlib.nullcontext()
+            with span, (obs.dispatch_annotation(plan.name) if obs is not None
+                        else contextlib.nullcontext()):
+                outs, aux = execute(jnp.asarray(batch), jnp.asarray(rects))
+                # np.asarray blocks until ready: the executor span covers
+                # dispatch + device run, not just the enqueue
+                outs = {k: np.asarray(v) for k, v in outs.items()}
+            if obs is not None:
+                obs.record_execution(
+                    self._executor_key(plan, bucket, batch.dtype, bb),
+                    plan.name, time.perf_counter() - t0,
+                )
         except ServeError:
             raise
         except Exception as exc:
@@ -426,6 +542,7 @@ class MorphService:
                 )
 
     def _execute_tiled(self, reqs: list) -> None:
+        obs = self._obs
         for r in reqs:
             if r.future.done():
                 continue  # already served before a batch-mate failed a retry
@@ -443,14 +560,20 @@ class MorphService:
                 aux_chunks.append(aux)  # record after all chunks dispatch:
                 return outs             # int(aux) here would sync per launch
 
+            span = (obs.group_span("executor", [r], plan=r.plan.name,
+                                   bucket=ext, kind="tiled",
+                                   shard=self.config.shard)
+                    if obs is not None else contextlib.nullcontext())
             try:
-                outs = run_tiled(
-                    r.img,
-                    r.plan,
-                    execute,
-                    tile_interior=self.config.tile_interior,
-                    launch_batch=self.config.max_tiles_per_launch,
-                )
+                with span, (obs.dispatch_annotation(r.plan.name)
+                            if obs is not None else contextlib.nullcontext()):
+                    outs = run_tiled(
+                        r.img,
+                        r.plan,
+                        execute,
+                        tile_interior=self.config.tile_interior,
+                        launch_batch=self.config.max_tiles_per_launch,
+                    )
             except ServeError:
                 raise
             except Exception as exc:
@@ -471,6 +594,14 @@ class MorphService:
                 r.future.set_result(outs["out"] if names == ("out",) else outs)
 
     # -------------------------------------------------------------- lifecycle
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot with the point-in-time gauges refreshed — the
+        unit the sharded router merges by metric type."""
+        self.metrics.gauge("window.effective_ms", mode="max").set(
+            self._batcher.window_s * 1e3
+        )
+        return self.metrics.snapshot()
+
     def stats(self) -> dict:
         snap = self._stats.snapshot(self.config.max_batch)
         snap["cache"] = self.cache.snapshot()
@@ -485,7 +616,20 @@ class MorphService:
             self._injector.snapshot() if self._injector is not None else None
         )
         snap["resilience"] = resilience
+        snap["obs"] = self._obs.snapshot() if self._obs is not None else None
         return snap
+
+    def executor_profile(self) -> dict:
+        """Per-cache-key compile/run profile (empty unless ``obs`` enables
+        executor profiling)."""
+        return self._obs.executor_profile() if self._obs is not None else {}
+
+    def export_trace(self) -> dict | None:
+        """Chrome trace-event JSON of the finished spans (Perfetto-loadable);
+        None when tracing is off."""
+        if self._obs is None or self._obs.tracer is None:
+            return None
+        return chrome_trace([self._obs.tracer])
 
     def flush(self, timeout: float | None = None) -> bool:
         return self._batcher.flush(timeout)

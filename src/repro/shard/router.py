@@ -37,9 +37,15 @@ image where *latency* matters more than engine throughput, use
 ``repro.shard.to_sharded`` directly — that is mesh parallelism inside a
 single computation, not across the request stream.
 
-``stats()`` merges per-shard engines: counters and cache hits/misses/
-evictions sum, throughput adds, latency quantiles and the adaptive window
-take the worst shard (max), and the full per-shard list rides along.
+``stats()`` merges per-shard engines by metric type (``repro.obs``):
+counters sum, gauges apply their declared mode (cache sizes add, the
+adaptive window takes the worst shard), histograms add bucket counts so the
+merged p50/p99 are true cross-shard quantiles — and the full per-shard list
+rides along. With ``ServiceConfig.obs`` set, the router also traces: one
+trace ID is minted per request and threaded through every failover hop
+(each hop is a span on the router's ``"router"`` lane; shard-side queue/
+dispatch/executor/retry spans carry the same ID), and ``export_trace()``
+merges the router and all shard tracers onto one Chrome-trace timeline.
 """
 from __future__ import annotations
 
@@ -53,6 +59,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import (
+    MetricsRegistry,
+    Observability,
+    cache_stats,
+    chrome_trace,
+    new_trace_id,
+    quantile_from_snapshot,
+)
 from repro.serve.morph.buckets import choose_bucket
 from repro.serve.morph.plans import Plan, get_plan, single_op_plan
 from repro.serve.morph.resilience import (
@@ -118,11 +132,18 @@ class ShardedMorphService:
             MorphService(dataclasses.replace(
                 self.config,
                 device=d,
+                shard=i,  # labels the shard's trace lane and error context
                 # shard-scoped fault clauses apply only to their shard
                 faults=(self.config.faults.scoped(i)
                         if self.config.faults is not None else None),
             ))
             for i, d in enumerate(self.devices)
+        )
+        obs_cfg = self.config.obs
+        self._obs = (
+            Observability(obs_cfg, MetricsRegistry(), pid="router", name="router")
+            if obs_cfg is not None and obs_cfg.enabled
+            else None
         )
         self._hlock = threading.Lock()
         self._health = [_ShardHealth() for _ in self.shards]
@@ -287,12 +308,16 @@ class ShardedMorphService:
             time.monotonic() + deadline_ms / 1e3 if deadline_ms is not None else None
         )
         outer: Future = Future()
-        self._attempt(outer, img, plan, token, deadline_at, tag, frozenset())
+        # one trace ID per caller request, minted here so it survives every
+        # failover hop (shards see it via _trace and must not re-mint)
+        trace = new_trace_id() if self._obs is not None else None
+        self._attempt(outer, img, plan, token, deadline_at, tag, frozenset(),
+                      trace)
         return outer
 
     def _attempt(self, outer: Future, img, plan: Plan, token: bytes,
                  deadline_at: float | None, tag: str | None,
-                 excluded: frozenset) -> None:
+                 excluded: frozenset, trace: int | None = None) -> None:
         """Route one attempt; the done callback reroutes shard-level
         failures to the next survivor until every shard has been tried, so
         the caller's future always resolves — with the rerouted result or a
@@ -308,14 +333,29 @@ class ShardedMorphService:
         try:
             idx, was_probe = self._pick(token, excluded)
         except ShardUnavailable as exc:
+            if self._obs is not None:
+                self._obs.instant(
+                    "unroutable", trace=trace, plan=plan.name,
+                    excluded=sorted(excluded), error=type(exc).__name__,
+                )
             if not outer.done():
                 outer.set_exception(exc)
             return
+        # the hop span covers shard submit through future resolution — its
+        # duration is this attempt's full shard-side residence time
+        tracer = self._obs.tracer if self._obs is not None else None
+        hop = (
+            tracer.begin("hop", trace=trace, shard=idx, probe=was_probe,
+                         plan=plan.name, attempt=len(excluded))
+            if tracer is not None else None
+        )
         try:
             fut = self.shards[idx].submit_plan(
-                img, plan, deadline_ms=deadline_ms, tag=tag
+                img, plan, deadline_ms=deadline_ms, tag=tag, _trace=trace
             )
         except ServeError as exc:
+            if hop is not None:
+                tracer.end(hop, error=type(exc).__name__)
             # submit-time rejection (Overloaded, ServiceClosed): back-
             # pressure or shutdown, not a shard fault — shedding load is the
             # point, don't spread the spill. Resolve the caller's future
@@ -328,8 +368,10 @@ class ShardedMorphService:
                 outer.set_exception(exc)
             return
 
-        def done(f, idx=idx, was_probe=was_probe):
+        def done(f, idx=idx, was_probe=was_probe, hop=hop):
             exc = f.exception()
+            if hop is not None:
+                tracer.end(hop, error=type(exc).__name__ if exc else None)
             if exc is None:
                 self._record_success(idx, was_probe)
                 if not outer.done():
@@ -338,8 +380,15 @@ class ShardedMorphService:
                 rewarm = self._record_failure(idx, was_probe)
                 self._rewarm_async(rewarm)
                 nxt = excluded | {idx}
+                if self._obs is not None:
+                    self._obs.instant(
+                        "failover", trace=trace, shard=idx,
+                        error=type(exc).__name__,
+                        exhausted=len(nxt) >= len(self.shards),
+                    )
                 if len(nxt) < len(self.shards):
-                    self._attempt(outer, img, plan, token, deadline_at, tag, nxt)
+                    self._attempt(outer, img, plan, token, deadline_at, tag,
+                                  nxt, trace)
                 elif not outer.done():
                     outer.set_exception(exc)
             else:  # request-level failure: typed, final, shard not indicted
@@ -368,24 +417,43 @@ class ShardedMorphService:
         return [f.result() for f in futures]
 
     # ------------------------------------------------------------- metrics
+    def metrics_snapshot(self) -> dict:
+        """The by-type merge of every shard's registry snapshot — the raw
+        form ``stats()`` derives its aggregates from."""
+        return MetricsRegistry.merge(
+            [s.metrics_snapshot() for s in self.shards]
+        )
+
     def stats(self) -> dict:
         per = [s.stats() for s in self.shards]
-        cache = {
-            k: sum(p["cache"][k] for p in per)
-            for k in ("size", "hits", "misses", "evictions")
-        }
-        total = cache["hits"] + cache["misses"]
-        cache["hit_rate"] = cache["hits"] / total if total else 0.0
-        bounded = {
-            k: sum(p["bounded_iter"][k] for p in per)
-            for k in ("executions", "iters_used", "iters_budget")
-        }
-        bounded["saved_frac"] = (
-            1.0 - bounded["iters_used"] / bounded["iters_budget"]
-            if bounded["iters_budget"] else 0.0
+        merged = self.metrics_snapshot()
+
+        def value(name: str):
+            # merged counter or gauge scalar (0 before first registration)
+            m = merged.get(name)
+            return m["value"] if m is not None else 0
+
+        # one merge rule per metric type replaces the old hand-coded
+        # key-by-key sums: counters summed, the cache-size gauge summed, the
+        # window gauge max'd, latency histograms added bucket-wise — so the
+        # merged p50/p99 are real cross-shard quantiles, not the worst
+        # shard's local estimate.
+        cache = cache_stats(
+            value("cache.size"), value("cache.hits"),
+            value("cache.misses"), value("cache.evictions"),
         )
+        iters_used = value("bounded_iter.iters_used")
+        iters_budget = value("bounded_iter.iters_budget")
+        bounded = {
+            "executions": value("bounded_iter.executions"),
+            "iters_used": iters_used,
+            "iters_budget": iters_budget,
+            "saved_frac": (
+                1.0 - iters_used / iters_budget if iters_budget else 0.0
+            ),
+        }
         resilience = {
-            k: sum(p["resilience"][k] for p in per)
+            k: value(f"batcher.{k}")
             for k in ("rejected_overloaded", "deadline_expired", "retries",
                       "bisections", "request_failures")
         }
@@ -396,24 +464,37 @@ class ShardedMorphService:
                 rewarms=self.rewarms,
                 failovers=self.failovers,
             )
+        lat = merged.get("latency_ms")
         return {
             "shards": len(self.shards),
             "healthy_shards": sum(h["state"] == "closed" for h in health),
             "health": health,
-            "requests": sum(p["requests"] for p in per),
-            "batches": sum(p["batches"] for p in per),
-            "tiled_requests": sum(p["tiled_requests"] for p in per),
+            "requests": value("requests"),
+            "batches": value("batches"),
+            "tiled_requests": value("tiled_requests"),
             "img_per_s": sum(p["img_per_s"] for p in per),
-            "p50_ms": max(p["p50_ms"] for p in per),
-            "p99_ms": max(p["p99_ms"] for p in per),
+            "p50_ms": quantile_from_snapshot(lat, 0.50) if lat else 0.0,
+            "p99_ms": quantile_from_snapshot(lat, 0.99) if lat else 0.0,
             "cache": cache,
             "bounded_iter": bounded,
             "resilience": resilience,
-            "effective_window_ms": max(p["effective_window_ms"] for p in per),
+            "effective_window_ms": merged["window.effective_ms"]["value"],
             "backend": per[0]["backend"],
             "interpret": per[0]["interpret"],
+            "obs": self._obs.snapshot() if self._obs is not None else None,
             "per_shard": per,
         }
+
+    def export_trace(self) -> dict | None:
+        """Router + all shard tracers merged onto one Chrome-trace timeline
+        (every tracer timestamps with the same process clock); None when
+        tracing is off."""
+        if self._obs is None or self._obs.tracer is None:
+            return None
+        tracers = [self._obs.tracer] + [
+            s._obs.tracer for s in self.shards if s._obs is not None
+        ]
+        return chrome_trace(tracers)
 
     # ------------------------------------------------------------ lifecycle
     def flush(self, timeout: float | None = None) -> bool:
