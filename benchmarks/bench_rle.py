@@ -1,0 +1,202 @@
+"""RLE backend benchmark: representation A/B across run densities.
+
+Three measurements, written to ``benchmarks/results/BENCH_rle.json``:
+
+* **sweep** — one boolean opening served three ways at run densities
+  0.1%–50% on 1–8 Mpx masks: the RLE host path (``lower_rle``, what the
+  serving gate dispatches to), the dense separable path (jitted
+  ``lower_xla``), and the fused Pallas megakernel (``lower_kernel``,
+  compiled backends only — interpreting Pallas on CPU measures the
+  interpreter, not the kernel). The acceptance number is the RLE-over-dense
+  ratio at <= 1% density on the >= 4 Mpx masks.
+* **serve_mix** — a mixed sparse/dense boolean traffic stream through
+  ``MorphService`` with the density gate on: per-representation request
+  counts straight from ``stats()``, showing the gate splitting one traffic
+  mix between executions.
+* **--fit-cost-table** — fits the cost model's *representation axis*: RLE
+  cost affine in the measured run count, dense cost affine in the pixel
+  count, merged into ``src/repro/core/cost_table.json`` under this device
+  (preserving every previously fit axis) — after which the serving gate
+  decides from measurements instead of the 5% density heuristic.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_rle [--smoke] [--fit-cost-table]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import time_fn_amortized as _amortized
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "BENCH_rle.json")
+
+SE = (9, 9)
+MEAN_RUN = 40  # px; strokes longer than the SE wing, the document regime
+
+
+def _time_host(fn, *args, reps: int = 5) -> float:
+    import time
+
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args)
+    return (time.perf_counter() - t0) / reps
+
+
+def _cases(smoke: bool):
+    if smoke:
+        return [(512, 512)], (0.005, 0.2)
+    return (
+        [(1024, 1024), (2048, 2048), (2048, 4096)],
+        (0.001, 0.005, 0.01, 0.05, 0.2, 0.5),
+    )
+
+
+def bench_sweep(shapes, densities, reps) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dispatch import DispatchPolicy, resolve_interpret
+    from repro.data.images import synth_sparse_masks
+    from repro.morph import X, lower_kernel, lower_xla
+    from repro.rle import encode, lower_rle
+
+    expr = X.opening(SE)
+    interpret = resolve_interpret(None, DispatchPolicy.calibrated())
+    dense_fn = jax.jit(lower_xla(expr))
+    fused_fn = None if interpret else jax.jit(lower_kernel(expr))
+    rle_fn = lower_rle(expr)
+
+    rows = []
+    for h, w in shapes:
+        for density in densities:
+            m = synth_sparse_masks(1, h, w, run_density=density,
+                                   mean_run=MEAN_RUN, seed=0)[0]
+            im = encode(m)
+            mj = jnp.asarray(m)
+            t_dense = _amortized(dense_fn, mj, reps=reps)
+            t_rle = _time_host(rle_fn, m, reps=reps)
+            t_fused = (
+                _amortized(fused_fn, mj, reps=reps)
+                if fused_fn is not None else None
+            )
+            row = {
+                "shape": [h, w],
+                "mpx": round(h * w / 1e6, 2),
+                "run_density": density,
+                "runs": int(im.n),
+                "density_measured": round(im.n / (h * w), 5),
+                "dense_s": t_dense,
+                "rle_s": t_rle,
+                "fused_s": t_fused,
+                "rle_over_dense": round(t_dense / t_rle, 2),
+            }
+            rows.append(row)
+            print(f"  {h}x{w} density={density}: dense {t_dense*1e3:.1f}ms "
+                  f"rle {t_rle*1e3:.1f}ms -> {row['rle_over_dense']}x")
+    return rows
+
+
+def bench_serve_mix(reps_per_class: int, shape=(512, 512)) -> dict:
+    from repro.data.images import synth_sparse_masks
+    from repro.serve.morph import MorphService, Plan, ServiceConfig, Step
+
+    plan = Plan("mask_open", (Step("opening", (3, 3)),))
+    sparse = synth_sparse_masks(reps_per_class, *shape, run_density=0.003,
+                                mean_run=MEAN_RUN, seed=1)
+    dense = np.random.default_rng(2).random((reps_per_class, *shape)) < 0.5
+    with MorphService(ServiceConfig(window_ms=0.5)) as svc:
+        futs = []
+        for i in range(reps_per_class):  # interleave: one mix, not two phases
+            futs.append(svc.submit_plan(sparse[i], plan))
+            futs.append(svc.submit_plan(dense[i], plan))
+        for f in futs:
+            f.result()
+        st = svc.stats()
+    out = {
+        "requests": st["requests"],
+        "rle_requests": st["rle_requests"],
+        "repr": st["repr"],
+        "p50_ms": st["p50_ms"],
+        "p99_ms": st["p99_ms"],
+    }
+    print(f"  serve mix: {out['repr']['rle']} -> rle, "
+          f"{out['repr']['dense']} -> dense "
+          f"(density_p50 {out['repr']['density_p50']})")
+    return out
+
+
+def fit_repr_axis(sweep_rows) -> dict:
+    """Fit the representation-axis curves from the sweep samples and merge
+    them into this device's cost table (never clobbering other axes)."""
+    from repro.core.dispatch import DispatchPolicy
+    from repro.morph.opt.cost import fit_affine, load_measured, save_measured
+
+    rle_pts = [(r["runs"], r["rle_s"] * 1e6) for r in sweep_rows]
+    dense_pts = [(r["shape"][0] * r["shape"][1], r["dense_s"] * 1e6)
+                 for r in sweep_rows]
+    fits = {"rle": fit_affine(rle_pts), "dense": fit_affine(dense_pts)}
+    measured = load_measured()
+    if measured is not None:
+        entries = dict(measured.entries)
+        crossovers = dict(measured.crossovers)
+        op2d = dict(measured.op2d)
+    else:
+        # seed crossovers from the active policy so calibrated() (which
+        # adopts a table's crossovers) keeps matching this table
+        p = DispatchPolicy.calibrated()
+        entries, op2d = {}, {}
+        crossovers = {"w0_major": p.w0_major, "w0_minor": p.w0_minor,
+                      "w0_fused": p.w0_fused, "small_method": p.small_method}
+    for method, (c0, c1) in fits.items():
+        # negative intercepts are sweep noise; clamping keeps tiny inputs
+        # from reading as free
+        entries[("repr", method, "bool")] = (round(max(0.0, c0), 3),
+                                             round(max(0.0, c1), 8))
+    path = save_measured(entries, crossovers, op2d=op2d)
+    print("fit repr axis -> " + path + ": "
+          + ", ".join(f"{m}: {c0:.1f}us + {c1:.4f}us/driver"
+                      for m, (c0, c1) in fits.items()))
+    return {m: list(f) for m, f in fits.items()}
+
+
+def run(smoke: bool = False, fit: bool = False) -> dict:
+    import jax
+
+    shapes, densities = _cases(smoke)
+    reps = 2 if smoke else 5
+    sweep = bench_sweep(shapes, densities, reps)
+    out = {
+        "device_kind": str(jax.devices()[0].device_kind),
+        "se": list(SE),
+        "mean_run": MEAN_RUN,
+        "smoke": smoke,
+        "sweep": sweep,
+        "serve_mix": bench_serve_mix(2 if smoke else 8),
+    }
+    if fit:
+        out["repr_fit"] = fit_repr_axis(sweep)
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {RESULTS}")
+    return out
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small mask + few reps (CI)")
+    p.add_argument("--fit-cost-table", action="store_true",
+                   help="fit the repr axis and merge into cost_table.json")
+    a = p.parse_args()
+    run(smoke=a.smoke, fit=a.fit_cost_table)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

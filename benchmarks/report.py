@@ -202,6 +202,34 @@ def obs_table(path: str) -> str:
     return "\n".join(out)
 
 
+def rle_table(path: str) -> str:
+    with open(path) as f:
+        d = json.load(f)
+    se = "x".join(str(s) for s in d["se"])
+    out = [f"### RLE vs dense binary morphology (opening {se}, "
+           f"mean run {d['mean_run']} px, {d['device_kind']})", "",
+           "| shape | run density | runs | dense ms | RLE ms | fused ms | "
+           "RLE vs dense |",
+           "|---|---|---|---|---|---|---|"]
+    for r in d["sweep"]:
+        shape = "x".join(str(s) for s in r["shape"])
+        fused = f"{r['fused_s']*1e3:.1f}" if r.get("fused_s") else "-"
+        out.append(
+            f"| {shape} | {r['run_density']} | {r['runs']} "
+            f"| {r['dense_s']*1e3:.1f} | {r['rle_s']*1e3:.1f} | {fused} "
+            f"| **{r['rle_over_dense']}x** |")
+    m = d["serve_mix"]
+    out.append("")
+    out.append(
+        f"run-domain cost scales with content, not pixels: the win grows "
+        f"with image size and collapses past a few % density — which is why "
+        f"dispatch is per-request. Serve mix ({m['requests']} boolean "
+        f"requests): density gate sent {m['repr']['rle']} to RLE and "
+        f"{m['repr']['dense']} to dense (density p50 "
+        f"{m['repr']['density_p50']}).")
+    return "\n".join(out)
+
+
 def roofline_table(path: str) -> str:
     with open(path) as f:
         rows = json.load(f)
@@ -265,6 +293,10 @@ def main():
         parts.append(obs_table(f"{base}/BENCH_obs.json"))
     except FileNotFoundError:
         parts.append("observability results missing (run benchmarks.bench_obs)")
+    try:
+        parts.append(rle_table(f"{base}/BENCH_rle.json"))
+    except FileNotFoundError:
+        parts.append("RLE results missing (run benchmarks.bench_rle)")
     try:
         parts.append(roofline_table(f"{base}/roofline.json"))
     except FileNotFoundError:

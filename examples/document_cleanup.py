@@ -93,6 +93,34 @@ with MorphService(svc_cfg) as svc:
 print(f"served opening-by-reconstruction (bounded 64 iters): {opened.shape} "
       f"{opened.dtype} — iterative operators are servable now")
 
+# ------------------------------------------------- binary-mask stage (RLE)
+# Downstream OCR wants a foreground mask, not grayscale: threshold the
+# cleaned scans to ink masks and open away residual specks. Boolean plans
+# route through the per-request density gate — sparse ink masks execute in
+# the run domain (cost ∝ runs, not pixels) while the same plan on a dense
+# mask stays on the dense path; both land bit-identical to lower_xla.
+from repro.morph import lower_rle
+from repro.rle import estimate_run_density
+
+mask_expr = X.opening((3, 3))
+ink = np.asarray(clean) < 128  # ink is dark; salt is already opened away
+dens = [estimate_run_density(m) for m in ink]
+direct_mask = np.asarray(lower_xla(mask_expr)(jnp.asarray(ink)))
+rle_mask = lower_rle(mask_expr)(ink)
+mask_plan = to_plan(mask_expr, name="ink_mask")
+with MorphService(svc_cfg) as svc:
+    served_mask = svc.run_batch(list(ink), mask_plan)
+    mstats = svc.stats()
+same_rle = np.array_equal(rle_mask, direct_mask)
+same_served = all(
+    np.array_equal(served_mask[i], direct_mask[i]) for i in range(batch)
+)
+assert same_rle and same_served, "binary-mask paths diverged"
+print(f"ink masks: run density p50 {np.median(dens):.4f} — served "
+      f"{mstats['repr']['rle']}/{batch} via RLE, "
+      f"{mstats['repr']['dense']}/{batch} dense; RLE == dense == served: "
+      f"{same_rle and same_served} (bit-exact)")
+
 emb = patch_embed_stub(jnp.asarray(clean), d_model=256, n_tokens=256)
 print(f"vision-tower stub tokens: {emb.shape} "
       f"(these feed VLM cross-attention layers)")

@@ -28,6 +28,10 @@ class MorphOp:
 
     def neutral(self, dtype) -> np.generic:
         dtype = jnp.dtype(dtype)
+        if dtype == jnp.bool_:
+            # Boolean lattice: erosion (min/AND) is neutral on True, dilation
+            # (max/OR) on False — the binary-mask case the RLE backend serves.
+            return np.bool_(self.name == "min")
         if jnp.issubdtype(dtype, jnp.floating):
             inf = np.array(np.inf, dtype=dtype)
             return inf if self.name == "min" else -inf
@@ -67,6 +71,11 @@ def widen_dtype(dtype) -> jnp.dtype:
     serving-plan gradient step.
     """
     dtype = jnp.dtype(dtype)
+    if dtype == jnp.bool_:
+        # bool is not an integer subdtype, but a boolean difference is not a
+        # bool either (gradient of a mask counts 0/1 edges): widen like the
+        # narrow integers do.
+        return jnp.dtype(jnp.int32)
     if jnp.issubdtype(dtype, jnp.integer):
         return jnp.promote_types(dtype, jnp.int32)
     return dtype

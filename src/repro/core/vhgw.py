@@ -25,6 +25,12 @@ from repro.core.types import Array, MorphOp, as_op, check_window
 
 def _cum(op: MorphOp, x: Array, axis: int, reverse: bool = False) -> Array:
     fn = jax.lax.cummin if op.name == "min" else jax.lax.cummax
+    if x.dtype == jnp.bool_:
+        # the lax cum-scans reject bool; the 0/1 embedding is order-
+        # isomorphic, so scan it and come back
+        return fn(
+            x.astype(jnp.uint8), axis=axis % x.ndim, reverse=reverse
+        ).astype(jnp.bool_)
     return fn(x, axis=axis % x.ndim, reverse=reverse)
 
 

@@ -58,6 +58,49 @@ def synth_documents(cfg: ImagePipelineConfig, batch: int) -> np.ndarray:
     return img
 
 
+def synth_sparse_masks(
+    batch: int,
+    height: int,
+    width: int,
+    *,
+    run_density: float = 0.01,
+    mean_run: int = 12,
+    seed: int = 0,
+) -> np.ndarray:
+    """(B, H, W) bool masks with a controllable *run density* knob.
+
+    ``run_density`` is foreground runs per pixel — the exact quantity the
+    RLE cost curves and the serving gate dispatch on, which ad-hoc
+    ``np.random`` thresholding cannot hit (iid pixel noise couples run
+    count to pixel density). Each mask scatters ~``run_density * H * W``
+    horizontal segments of geometric mean length ``mean_run`` at uniform
+    positions — the stroke-fragment structure a thresholded document scan
+    has. Overlapping segments merge, so the realized density lands
+    slightly under the knob at high settings; tests/benchmarks that need
+    the true value should measure it (``estimate_run_density``).
+    """
+    if not 0.0 <= run_density <= 0.5:
+        raise ValueError(f"run_density must be in [0, 0.5], got {run_density}")
+    rng = np.random.default_rng(seed)
+    out = np.zeros((batch, height, width), np.bool_)
+    n_runs = int(round(run_density * height * width))
+    if n_runs == 0:
+        return out
+    flat = out.reshape(batch, height * width)
+    for b in range(batch):
+        rows = rng.integers(0, height, n_runs)
+        starts = rng.integers(0, width, n_runs)
+        lens = np.minimum(
+            rng.geometric(1.0 / max(1, mean_run), n_runs), width - starts
+        )
+        # one boolean cumsum-free scatter per mask: mark [start, end) cells
+        first = np.cumsum(lens) - lens
+        idx = np.repeat(np.arange(n_runs), lens)
+        offs = np.arange(int(lens.sum())) - first[idx]
+        flat[b, rows[idx] * width + starts[idx] + offs] = True
+    return out
+
+
 # The canonical cleanup chain, as data: (op, se) stages consumed both by
 # ``_cleanup`` below and by serve/morph/plans.py (``document_cleanup`` plan),
 # so the service and the raw pipeline are verifiably the same computation.

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import DispatchPolicy, resolve_interpret
-from repro.core.types import Array, as_op, check_window, widened_sub
+from repro.core.types import Array, as_op, check_window, widen_dtype, widened_sub
 from repro.kernels.fused_gradient import gradient_linear_sublane
 from repro.kernels.morph_fused import fused_supports, gradient2d_fused, morph2d_fused
 from repro.kernels.morph_linear import morph_linear_sublane
@@ -168,6 +168,12 @@ def raw_gradient2d(
     """Backend primitive for the gradient pattern: the shared-strip fused
     gradient kernel, or two-pass dilate/erode plus a widened subtraction."""
     interpret = resolve_interpret(interpret, policy)
+    if x.dtype == jnp.bool_:
+        # a boolean gradient is defined in the widened dtype anyway
+        # (core.types.widen_dtype), and the fused kernel's in-kernel sub has
+        # no boolean form — lattice ops on the widened 0/1 image are
+        # bit-identical, so widen once up front
+        x = x.astype(widen_dtype(x.dtype))
     if (
         policy.fused_2d
         and fused_supports(se)

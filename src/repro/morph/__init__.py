@@ -8,6 +8,7 @@ Build an expression once, run it anywhere:
     expr = X.opening((3, 3)).closing((5, 5)).gradient((3, 3))
     y = lower_xla(expr)(img)                   # pure-XLA separable passes
     y = lower_kernel(expr)(img)                # fused Pallas megakernel
+    y = lower_rle(expr)(mask)                  # run-domain (bool-only graphs)
     plan = to_plan(expr, name="edges")         # servable via MorphService
 
 ``core.morphology``, ``core.derived``, the five 2-D kernel entry points and
@@ -42,6 +43,16 @@ from repro.morph.lower_xla import lower_xla
 from repro.morph.opt import CostModel, cost_model_for, optimize, prim_count
 from repro.morph.plan_compile import op_expr, steps_to_outputs, to_plan
 
+
+def __getattr__(name):
+    # lazy: repro.rle builds on this package, so an eager import would cycle
+    if name == "lower_rle":
+        from repro.rle import lower_rle
+
+        return lower_rle
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "BoundedIter",
     "Cast",
@@ -70,6 +81,7 @@ __all__ = [
     "evaluate",
     "is_gradient",
     "lower_kernel",
+    "lower_rle",
     "lower_xla",
     "cost_model_for",
     "optimize",

@@ -52,11 +52,16 @@ COST_TABLE_FILE = os.path.join(
     "cost_table.json",
 )
 
-AXIS_KINDS = ("major", "minor", "fused", "collective")
+AXIS_KINDS = ("major", "minor", "fused", "collective", "repr")
 _SMALL_METHODS = ("linear", "linear_paired", "linear_tree")
 # Methods under the "collective" axis kind (sharded execution, repro.shard):
 # affine in *elements moved*, fit by bench_shard --fit-collective.
 COLLECTIVE_METHODS = ("ppermute", "all_to_all")
+# Methods under the "repr" axis kind (representation choice for boolean
+# plans, repro.rle): "rle" is affine in the *run count*, "dense" in the
+# *pixel count* — the drivers differ per method, which is the whole point
+# of the axis. Fit by bench_rle --fit-cost-table.
+REPR_METHODS = ("rle", "dense")
 
 
 def feature(method: str, w: int) -> float:
@@ -304,6 +309,41 @@ class CostModel:
         pc = pc + (2 * k - 1) * launch
         ac = ac + self.collective_cost("all_to_all", 0, dtype)
         return pc <= ac
+
+    def repr_cost(self, method: str, driver: int, dtype: str = "bool"):
+        """Modeled µs for one boolean-plan execution under ``method``
+        (``"rle"`` driven by run count, ``"dense"`` by pixel count), or
+        ``None`` when unmeasured — like the collectives, representation
+        curves have no analytic reconstruction (no historical scalar ever
+        described them), so absence means "use the density heuristic".
+        """
+        if method not in REPR_METHODS:
+            raise ValueError(
+                f"representation method must be one of {REPR_METHODS}, "
+                f"got {method!r}"
+            )
+        e = self._entry("repr", method, dtype)
+        if e is None:
+            return None
+        c0, c1 = e
+        return max(0.0, c0 + c1 * float(driver))
+
+    def rle_wins(self, runs: int, pixels: int, dtype: str = "bool") -> bool:
+        """Representation choice for one boolean request: run-domain vs
+        dense, given the request's measured run count and its pixel count.
+
+        Measured curves (``bench_rle --fit-cost-table``) decide when both
+        exist; otherwise the density heuristic: run-domain work is a few
+        vector ops per run against a few elementwise passes per pixel, so
+        RLE wins comfortably below ~5% runs/pixel on every host we have
+        measured — a deliberately conservative default (the measured
+        crossover is usually higher).
+        """
+        rc = self.repr_cost("rle", runs, dtype)
+        dc = self.repr_cost("dense", pixels, dtype)
+        if rc is None or dc is None:
+            return runs <= 0.05 * pixels
+        return rc <= dc
 
     def fused_wins(self, se, dtype: str = "uint8", *, gradient: bool = False) -> bool:
         """Per-node fused-megakernel vs two-pass+transpose decision.

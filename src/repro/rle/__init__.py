@@ -1,0 +1,44 @@
+"""Run-length-encoded binary morphology backend.
+
+Cost scales with foreground *runs*, not pixels (arXiv 1504.01052): for the
+sparse thresholded masks document-cleanup traffic carries, the run-domain
+operators beat any dense path — separable, fused, or sharded — by the
+density ratio. ``lower_rle`` is the fifth MorphExpr lowering (boolean
+flat graphs only); the serving tier picks it per request via a measured
+run-density probe against the cost model's representation axis.
+"""
+from repro.rle.image import (
+    RLEImage,
+    check_binary,
+    decode,
+    default_capacity,
+    encode,
+    estimate_run_density,
+)
+from repro.rle.lower import (
+    RLEUnsupported,
+    check_supported,
+    lower_rle,
+    plan_rle_eligible,
+    supports_expr,
+)
+from repro.rle.runs import closing, dilate, erode, opening, transpose
+
+__all__ = [
+    "RLEImage",
+    "RLEUnsupported",
+    "check_binary",
+    "check_supported",
+    "closing",
+    "decode",
+    "default_capacity",
+    "dilate",
+    "encode",
+    "erode",
+    "estimate_run_density",
+    "lower_rle",
+    "opening",
+    "plan_rle_eligible",
+    "supports_expr",
+    "transpose",
+]

@@ -1,0 +1,171 @@
+"""Fixed-capacity, jittable run-domain kernels.
+
+The host operators (``rle.runs``) carry exact-length buffers — the fastest
+shape for per-request host dispatch, but untraceable: run count is data.
+This module is the device-resident variant: every buffer has a static
+``capacity``, the live count ``n`` is a traced scalar, and each stage is a
+pure jnp function over the :class:`RLEImage` pytree, so run-domain stages
+can live inside a jitted pipeline.
+
+Capacity contract: a stage that would need more than ``capacity`` runs sets
+the sticky ``overflow`` flag (ORed through every subsequent stage) and its
+buffers are **unspecified** — callers must treat any overflowed result as
+garbage and re-run on the host path, which is exactly what ``lower_rle``'s
+fallback does. Dead slots sort to the tail (``rows == H``), so live runs
+always occupy a sorted prefix.
+
+One documented asymmetry: :func:`transpose_fixed` re-encodes through a
+dense intermediate (O(pixels) elementwise work under jit) instead of the
+host path's run-domain event sweep — data-dependent expansion sizes are
+hostile to a fixed trace, and the jit path exists for device residency,
+not for the host path's O(runs) serving speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.rle.image import RLEImage, default_capacity
+
+
+def encode_fixed(x, capacity: int | None = None) -> RLEImage:
+    """Dense ``(H, W)`` bool -> fixed-capacity :class:`RLEImage` (traced).
+
+    Edge detection along columns exactly as the host encoder; the first
+    ``capacity`` runs (row-major, so ``(row, start)``-sorted) fill the
+    buffers and ``overflow`` records whether any were dropped.
+    """
+    x = jnp.asarray(x)
+    if x.dtype != jnp.bool_:
+        raise TypeError(f"encode_fixed takes a bool mask, got {x.dtype}")
+    h, w = x.shape
+    capacity = int(capacity or default_capacity((h, w)))
+    edges = jnp.diff(x.astype(jnp.int8), axis=1, prepend=0, append=0)
+    pad = h * (w + 1)
+    sidx = jnp.nonzero(edges.ravel() == 1, size=capacity, fill_value=pad)[0]
+    eidx = jnp.nonzero(edges.ravel() == -1, size=capacity, fill_value=pad)[0]
+    n = jnp.sum(edges == 1, dtype=jnp.int32)
+    live = jnp.arange(capacity, dtype=jnp.int32) < n
+    return RLEImage(
+        rows=jnp.where(live, sidx // (w + 1), h).astype(jnp.int32),
+        starts=jnp.where(live, sidx % (w + 1), 0).astype(jnp.int32),
+        ends=jnp.where(live, eidx % (w + 1), 0).astype(jnp.int32),
+        n=jnp.minimum(n, capacity),
+        shape=(int(h), int(w)),
+        overflow=n > capacity,
+    )
+
+
+def decode_fixed(im: RLEImage):
+    """Fixed-capacity runs -> dense ``(H, W)`` bool (traced): +/-1 coverage
+    edges scattered flat, one cumsum. Dead slots index the drop slot."""
+    h, w = im.shape
+    live = (jnp.arange(im.capacity, dtype=jnp.int32) < im.n).astype(jnp.int32)
+    base = jnp.minimum(im.rows.astype(jnp.int32) * w, h * w)
+    delta = jnp.zeros(h * w + 1, jnp.int32)
+    delta = delta.at[jnp.minimum(base + im.starts, h * w)].add(live)
+    delta = delta.at[jnp.minimum(base + im.ends, h * w)].add(-live)
+    return (jnp.cumsum(delta[:-1]) > 0).reshape(h, w)
+
+
+def _compact(im: RLEImage, keep, starts, ends) -> RLEImage:
+    """Rebuild with only ``keep`` slots live, stably sorted to the prefix."""
+    h, _ = im.shape
+    order = jnp.argsort(~keep, stable=True)
+    return dataclasses.replace(
+        im,
+        rows=jnp.where(keep, im.rows, h).astype(jnp.int32)[order],
+        starts=jnp.where(keep, starts, 0).astype(jnp.int32)[order],
+        ends=jnp.where(keep, ends, 0).astype(jnp.int32)[order],
+        n=jnp.sum(keep, dtype=jnp.int32),
+    )
+
+
+def erode_h_fixed(im: RLEImage, window: int) -> RLEImage:
+    """Horizontal erosion, fixed capacity: same coordinate arithmetic as
+    the host pass (virtual-True borders), with a stable compaction in place
+    of the host path's boolean gather. Never overflows (runs only die)."""
+    wing = (int(window) - 1) // 2
+    if wing == 0:
+        return im
+    _, w = im.shape
+    live = jnp.arange(im.capacity, dtype=jnp.int32) < im.n
+    sv = jnp.where(im.starts == 0, -wing, im.starts)
+    ev = jnp.where(im.ends == w, w + wing, im.ends)
+    ns, ne = sv + wing, ev - wing
+    return _compact(im, live & (ne > ns), ns, ne)
+
+
+def dilate_h_fixed(im: RLEImage, window: int) -> RLEImage:
+    """Horizontal dilation, fixed capacity: grow, clip, merge each row's
+    overlapping runs (head flags -> gather each group's first start / last
+    end). Never overflows (merging only shrinks the run count)."""
+    wing = (int(window) - 1) // 2
+    if wing == 0:
+        return im
+    h, w = im.shape
+    cap = im.capacity
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    live = idx < im.n
+    ns = jnp.maximum(im.starts - wing, 0)
+    ne = jnp.minimum(im.ends + wing, w)
+    head = live & (
+        (idx == 0)
+        | (im.rows != jnp.roll(im.rows, 1))
+        | (ns > jnp.roll(ne, 1))
+    )
+    hidx = jnp.nonzero(head, size=cap, fill_value=cap)[0].astype(jnp.int32)
+    n_out = jnp.sum(head, dtype=jnp.int32)
+    next_head = jnp.concatenate([hidx[1:], jnp.full((1,), cap, jnp.int32)])
+    last = jnp.clip(jnp.minimum(next_head, im.n) - 1, 0, cap - 1)
+    first = jnp.clip(hidx, 0, cap - 1)
+    out_live = idx < n_out
+    return dataclasses.replace(
+        im,
+        rows=jnp.where(out_live, im.rows[first], h).astype(jnp.int32),
+        starts=jnp.where(out_live, ns[first], 0).astype(jnp.int32),
+        ends=jnp.where(out_live, ne[last], 0).astype(jnp.int32),
+        n=n_out,
+    )
+
+
+def transpose_fixed(im: RLEImage, capacity: int | None = None) -> RLEImage:
+    """Column runs via a dense re-encode (module docstring); the transposed
+    mask can hold more runs than the input, so this is the one stage that
+    can overflow — the flag is ORed with the input's."""
+    out = encode_fixed(decode_fixed(im).T, capacity or im.capacity)
+    return dataclasses.replace(out, overflow=out.overflow | im.overflow)
+
+
+def _separable_fixed(im: RLEImage, se, hpass) -> RLEImage:
+    se_h, se_w = int(se[0]), int(se[1])
+    out = hpass(im, se_w)
+    if se_h > 1:
+        out = transpose_fixed(hpass(transpose_fixed(out), se_h))
+    return out
+
+
+def erode_fixed(im: RLEImage, se) -> RLEImage:
+    return _separable_fixed(im, se, erode_h_fixed)
+
+
+def dilate_fixed(im: RLEImage, se) -> RLEImage:
+    return _separable_fixed(im, se, dilate_h_fixed)
+
+
+def opening_fixed(im: RLEImage, se) -> RLEImage:
+    return dilate_fixed(erode_fixed(im, se), se)
+
+
+def closing_fixed(im: RLEImage, se) -> RLEImage:
+    return erode_fixed(dilate_fixed(im, se), se)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def roundtrip_fixed(x, capacity: int, _marker: int = 0):
+    """encode -> decode under one jit (capacity-contract smoke hook)."""
+    im = encode_fixed(x, capacity)
+    return decode_fixed(im), im.overflow

@@ -1,0 +1,195 @@
+"""``lower_rle`` — the fifth lowering: MorphExpr -> run-domain execution.
+
+Sits beside ``lower_xla`` / ``lower_kernel`` / ``to_plan`` / ``to_sharded``
+(and lives here rather than in ``repro.morph`` for the same import-cycle
+reason ``to_sharded`` lives in ``repro.shard``). The run domain is a
+boolean lattice: only flat structural nodes — ``Var`` / ``Erode`` /
+``Dilate`` (and whatever the optimizer folds them into) — have a run-domain
+meaning. Arithmetic, gradients, casts and iteration are rejected up front
+with :class:`RLEUnsupported` so callers can catch one typed error and fall
+back to a dense lowering.
+
+Two execution modes share the graph walk:
+
+* ``mode="host"`` (default, and what the serving gate uses): exact-length
+  numpy buffers, O(runs) per operator — per-request cost follows content.
+* ``mode="jit"``: the fixed-capacity kernels under one ``jax.jit`` per
+  input shape; if the capacity contract trips (sticky ``overflow`` flag)
+  the request transparently re-runs on the host path, so results are
+  always exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.morph.analyze import free_vars
+from repro.morph.expr import Dilate, Erode, MorphExpr, Var
+from repro.rle import kernels, runs
+from repro.rle.image import RLEImage, check_binary, decode, default_capacity, encode
+
+
+class RLEUnsupported(TypeError):
+    """Raised for MorphExpr graphs with no run-domain meaning."""
+
+
+def check_supported(expr: MorphExpr) -> None:
+    """Walk ``expr``; raise :class:`RLEUnsupported` at the first node that
+    is not Var/Erode/Dilate (iterative duals included — an opening is just
+    ``Dilate(Erode(x))`` in the IR, so flat chains pass naturally)."""
+    seen: set[int] = set()
+
+    def walk(e: MorphExpr) -> None:
+        if id(e) in seen:
+            return
+        seen.add(id(e))
+        if isinstance(e, Var):
+            return
+        if isinstance(e, (Erode, Dilate)):
+            walk(e.child)
+            return
+        raise RLEUnsupported(
+            f"lower_rle supports flat structural graphs (Var/Erode/Dilate); "
+            f"{type(e).__name__} has no run-domain meaning — use a dense "
+            "lowering (lower_xla / lower_kernel) for this expression"
+        )
+
+    walk(expr)
+
+
+def supports_expr(expr: MorphExpr) -> bool:
+    try:
+        check_supported(expr)
+    except RLEUnsupported:
+        return False
+    return True
+
+
+def plan_rle_eligible(plan) -> bool:
+    """True iff every output of a serving plan is run-domain lowerable.
+
+    This is the *structural* half of the serving gate (the density probe is
+    the per-request half): a plan qualifies when all its outputs are flat
+    Var/Erode/Dilate chains over the single input ``x``.
+    """
+    try:
+        outputs = plan.outputs
+    except AttributeError:
+        return False
+    if not outputs:
+        return False
+    for _, e in outputs:
+        if not supports_expr(e) or free_vars(e) - {"x"}:
+            return False
+    return True
+
+
+def _as_outputs(outputs):
+    single = isinstance(outputs, MorphExpr)
+    return single, {"out": outputs} if single else dict(outputs)
+
+
+def _eval_host(expr: MorphExpr, im: RLEImage, memo: dict) -> RLEImage:
+    key = id(expr)
+    if key in memo:
+        return memo[key]
+    if isinstance(expr, Var):
+        out = im
+    elif isinstance(expr, Erode):
+        out = runs.erode(_eval_host(expr.child, im, memo), (expr.se.h, expr.se.w))
+    else:
+        out = runs.dilate(_eval_host(expr.child, im, memo), (expr.se.h, expr.se.w))
+    memo[key] = out
+    return out
+
+
+def _eval_fixed(expr: MorphExpr, im: RLEImage, memo: dict) -> RLEImage:
+    key = id(expr)
+    if key in memo:
+        return memo[key]
+    if isinstance(expr, Var):
+        out = im
+    elif isinstance(expr, Erode):
+        out = kernels.erode_fixed(_eval_fixed(expr.child, im, memo), (expr.se.h, expr.se.w))
+    else:
+        out = kernels.dilate_fixed(_eval_fixed(expr.child, im, memo), (expr.se.h, expr.se.w))
+    memo[key] = out
+    return out
+
+
+def lower_rle(outputs, *, mode: str = "host", capacity: int | None = None, policy=None):
+    """``expr | {name: expr}`` -> ``fn(x) -> bool array | {name: bool array}``.
+
+    ``x`` is a bool mask, ``(H, W)`` or any ``(..., H, W)`` leading-batch
+    layout (batch items run independently — run buffers are ragged across a
+    batch, so there is no batched trace to share). Graphs are optimized
+    first like every other lowering (erode-of-erode folding and CSE are
+    profitable in the run domain too), then re-checked: optimization can
+    only remove structural nodes, never introduce arithmetic.
+    """
+    if mode not in ("host", "jit"):
+        raise ValueError(f"lower_rle mode must be 'host' or 'jit', got {mode!r}")
+    single, outs = _as_outputs(outputs)
+    for name, e in outs.items():
+        check_supported(e)
+        extra = free_vars(e) - {"x"}
+        if extra:
+            raise RLEUnsupported(
+                f"lower_rle output {name!r} reads vars {sorted(extra)}; the "
+                "run-domain path serves single-input graphs over Var('x')"
+            )
+
+    from repro.core.dispatch import DispatchPolicy
+    from repro.morph.opt import optimize
+
+    policy = policy or DispatchPolicy.calibrated()
+    outs = optimize(outs, policy=policy, kinds=("major", "minor"), dtype="bool")
+    for e in outs.values():
+        check_supported(e)
+
+    def run_host(x2d: np.ndarray) -> dict:
+        im = encode(x2d)
+        memo: dict = {}
+        return {k: decode(_eval_host(e, im, memo)) for k, e in outs.items()}
+
+    if mode == "host":
+        run_one = run_host
+    else:
+        import jax
+
+        @jax.jit
+        def jitted(x2d):
+            im = kernels.encode_fixed(
+                x2d, capacity or default_capacity(x2d.shape)
+            )
+            memo: dict = {}
+            res = {k: kernels.decode_fixed(_eval_fixed(e, im, memo)) for k, e in outs.items()}
+            flag = im.overflow
+            for v in memo.values():
+                flag = flag | v.overflow
+            return res, flag
+
+        def run_one(x2d: np.ndarray) -> dict:
+            res, overflow = jitted(x2d)
+            if bool(overflow):
+                # Capacity contract tripped: buffers are unspecified, the
+                # exact-length host path is the documented fallback.
+                return run_host(x2d)
+            return {k: np.asarray(v) for k, v in res.items()}
+
+    def fn(x):
+        x = check_binary(x)
+        if x.ndim < 2:
+            raise ValueError(f"lower_rle needs an (..., H, W) mask, got {x.shape}")
+        if x.ndim == 2:
+            res = run_one(x)
+        else:
+            lead = x.shape[:-2]
+            flat = x.reshape((-1,) + x.shape[-2:])
+            per = [run_one(flat[i]) for i in range(flat.shape[0])]
+            res = {
+                k: np.stack([p[k] for p in per]).reshape(lead + x.shape[-2:])
+                for k in outs
+            }
+        return res["out"] if single else res
+
+    return fn

@@ -50,6 +50,8 @@ from repro.obs import (
     chrome_trace,
     quantile_from_snapshot,
 )
+from repro.morph import cost_model_for
+from repro.rle import estimate_run_density, lower_rle, plan_rle_eligible
 from repro.serve.morph.batcher import MicroBatcher
 from repro.serve.morph.buckets import (
     DEFAULT_BUCKETS,
@@ -76,6 +78,14 @@ from repro.serve.morph.plans import (
     single_op_plan,
 )
 from repro.serve.morph.tiling import run_tiled
+
+
+# Run-density histogram bounds (runs per pixel): log-spaced over the range
+# the representation gate discriminates on — 0.1% (deep-RLE territory)
+# through 50% (checkerboard worst case).
+DENSITY_BUCKETS: tuple[float, ...] = (
+    0.0005, 0.001, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5,
+)
 
 
 def _round_up_pow2(n: int) -> int:
@@ -163,6 +173,13 @@ class ServiceStats:
         self._bounded_execs = self.registry.counter("bounded_iter.executions")
         self._iters_used = self.registry.counter("bounded_iter.iters_used")
         self._iters_budget = self.registry.counter("bounded_iter.iters_budget")
+        # representation gate (repro.rle): one counter per representation
+        # decision plus the measured run-density histogram, so the gate's
+        # behavior over a traffic mix is auditable from stats()/the registry
+        self._rle = self.registry.counter("rle_requests")
+        self._repr_dense = self.registry.counter("repr.dense")
+        self._repr_rle = self.registry.counter("repr.rle")
+        self._density = self.registry.histogram("rle.density", DENSITY_BUCKETS)
 
     @property
     def requests(self) -> int:
@@ -187,6 +204,23 @@ class ServiceStats:
             self._latency.observe_many([l * 1e3 for l in latencies_s])
             self._done_ts.extend([now] * len(latencies_s))
 
+    def record_repr(self, use_rle: bool, density: float) -> None:
+        """One representation-gate decision (at submit, before execution)."""
+        with self._lock:
+            (self._repr_rle if use_rle else self._repr_dense).inc()
+            self._density.observe(density)
+
+    def record_rle(self, latencies_s) -> None:
+        """RLE-routed requests execute per request on exact-shape run
+        buffers — like the tiled route, they never ride the batcher's
+        stacks, so they stay out of the occupancy metrics."""
+        now = time.monotonic()
+        with self._lock:
+            self._requests.inc(len(latencies_s))
+            self._rle.inc(len(latencies_s))
+            self._latency.observe_many([l * 1e3 for l in latencies_s])
+            self._done_ts.extend([now] * len(latencies_s))
+
     def record_bounded(self, used: int, budget: int) -> None:
         with self._lock:
             self._bounded_execs.inc()
@@ -203,12 +237,19 @@ class ServiceStats:
             bounded_execs = self._bounded_execs.value
             iters_used = self._iters_used.value
             iters_budget = self._iters_budget.value
+            density = self._density.snapshot()
         span = (ts[-1] - ts[0]) if len(ts) > 1 else 0.0
         mean_batch = sizes["sum"] / sizes["count"] if sizes["count"] else 0.0
         return {
             "requests": self._requests.value,
             "batches": self._batches.value,
             "tiled_requests": self._tiled.value,
+            "rle_requests": self._rle.value,
+            "repr": {
+                "dense": self._repr_dense.value,
+                "rle": self._repr_rle.value,
+                "density_p50": quantile_from_snapshot(density, 0.50),
+            },
             "bounded_iter": {
                 "executions": bounded_execs,
                 "iters_used": iters_used,
@@ -240,6 +281,10 @@ class ServiceConfig:
     tile_interior: tuple[int, int] = (512, 512)
     max_tiles_per_launch: int = 16
     backend: str = "auto"  # "kernel" (fused Pallas) | "jnp" | "auto"
+    # Representation gate (repro.rle): boolean requests on run-domain-
+    # lowerable plans are probed for run density and routed to RLE when the
+    # cost model says runs beat pixels. False = always dense (A/B baseline).
+    rle_gate: bool = True
     policy: DispatchPolicy | None = None
     interpret: bool | None = None
     cache_size: int = 128
@@ -307,6 +352,11 @@ class MorphService:
             self.backend = check_backend(self.config.backend)
         self.metrics = MetricsRegistry()
         self.cache = ExecutableCache(self.config.cache_size, registry=self.metrics)
+        # RLE route caches: structural eligibility per plan (one graph walk)
+        # and the host lowering per plan. Plain dicts — host lowerings are a
+        # closure over numpy ops, not a compiled artifact worth LRU pressure.
+        self._rle_eligible: dict = {}
+        self._rle_exec: dict = {}
         self._stats = ServiceStats(self.config.stats_window, registry=self.metrics)
         faults = self.config.faults
         self._injector = (
@@ -375,14 +425,19 @@ class MorphService:
                     plan=plan.name,
                 )
             deadline = time.monotonic() + deadline_ms / 1e3
-        bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
-        if bucket is None:
-            gh, gw = plan.halo()
-            ext = (self.config.tile_interior[0] + 2 * gh,
-                   self.config.tile_interior[1] + 2 * gw)
-            key = ("tiled", plan, ext, img.dtype.str)
+        if self._route_rle(img, plan):
+            # content-gated representation choice: run-domain execution on
+            # exact shapes — no bucket padding, no tiling
+            key, bucket = ("rle", plan, img.dtype.str), None
         else:
-            key = ("bucket", plan, bucket, img.dtype.str)
+            bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
+            if bucket is None:
+                gh, gw = plan.halo()
+                ext = (self.config.tile_interior[0] + 2 * gh,
+                       self.config.tile_interior[1] + 2 * gw)
+                key = ("tiled", plan, ext, img.dtype.str)
+            else:
+                key = ("bucket", plan, bucket, img.dtype.str)
         req = _Request(key, img, plan, bucket, Future(), time.monotonic(),
                        deadline=deadline, tag=tag, trace=_trace)
         if self._obs is not None:
@@ -421,6 +476,65 @@ class MorphService:
         """Synchronous convenience: submit all, wait for all, keep order."""
         futures = [self.submit_plan(im, plan, **kw) for im in imgs]
         return [f.result() for f in futures]
+
+    # ---------------------------------------------------------- RLE routing
+    def _route_rle(self, img: np.ndarray, plan: Plan) -> bool:
+        """The per-request representation gate: structural eligibility
+        (boolean dtype + run-domain-lowerable plan, cached per plan), then
+        a measured run-density probe against the cost model's
+        representation axis. Every probed request records its decision and
+        density so the gate's behavior is auditable from stats()."""
+        if not self.config.rle_gate or img.dtype != np.bool_:
+            return False
+        ok = self._rle_eligible.get(plan)
+        if ok is None:
+            ok = self._rle_eligible[plan] = plan_rle_eligible(plan)
+        if not ok:
+            return False
+        density = estimate_run_density(img)
+        use_rle = cost_model_for(self.policy).rle_wins(
+            int(density * img.size), img.size
+        )
+        self._stats.record_repr(use_rle, density)
+        return use_rle
+
+    def _rle_executor(self, plan: Plan):
+        key = (plan, self.policy.cache_token())
+        fn = self._rle_exec.get(key)
+        if fn is None:
+            fn = self._rle_exec[key] = lower_rle(
+                dict(plan.outputs), mode="host", policy=self.policy
+            )
+        return fn
+
+    def _execute_rle(self, reqs: list) -> None:
+        obs = self._obs
+        for r in reqs:
+            if r.future.done():
+                continue  # already served before a batch-mate failed a retry
+            if self._injector is not None:
+                self._injector.before_dispatch([r])
+            span = (obs.group_span("executor", [r], plan=r.plan.name,
+                                   kind="rle", shard=self.config.shard)
+                    if obs is not None else contextlib.nullcontext())
+            try:
+                with span:
+                    outs = self._rle_executor(r.plan)(r.img)
+            except ServeError:
+                raise
+            except Exception as exc:
+                raise ExecutorError(
+                    f"rle executor failed: {type(exc).__name__}: {exc}",
+                    plan=r.plan.name,
+                    dtype=np.dtype(r.img.dtype).name,
+                    batch=1,
+                ) from exc
+            names = r.plan.output_names()
+            # record before resolving: a caller returning from result()
+            # must observe its own request in stats()
+            self._stats.record_rle([time.monotonic() - r.t_submit])
+            if not r.future.done():
+                r.future.set_result(outs["out"] if names == ("out",) else outs)
 
     # ------------------------------------------------------------- execution
     def _executor_key(self, plan: Plan, shape: tuple[int, int], dtype, batch: int):
@@ -471,6 +585,8 @@ class MorphService:
         with span, self._device_scope():
             if key[0] == "tiled":
                 self._execute_tiled(reqs)
+            elif key[0] == "rle":
+                self._execute_rle(reqs)
             else:
                 self._execute_bucketed(key, reqs)
 

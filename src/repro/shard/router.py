@@ -465,6 +465,7 @@ class ShardedMorphService:
                 failovers=self.failovers,
             )
         lat = merged.get("latency_ms")
+        dens = merged.get("rle.density")
         return {
             "shards": len(self.shards),
             "healthy_shards": sum(h["state"] == "closed" for h in health),
@@ -472,6 +473,14 @@ class ShardedMorphService:
             "requests": value("requests"),
             "batches": value("batches"),
             "tiled_requests": value("tiled_requests"),
+            "rle_requests": value("rle_requests"),
+            "repr": {
+                "dense": value("repr.dense"),
+                "rle": value("repr.rle"),
+                "density_p50": (
+                    quantile_from_snapshot(dens, 0.50) if dens else 0.0
+                ),
+            },
             "img_per_s": sum(p["img_per_s"] for p in per),
             "p50_ms": quantile_from_snapshot(lat, 0.50) if lat else 0.0,
             "p99_ms": quantile_from_snapshot(lat, 0.99) if lat else 0.0,

@@ -64,6 +64,8 @@ RNG = np.random.default_rng(11)
 
 
 def rand(shape, dtype=np.uint8):
+    if dtype == np.bool_:
+        return RNG.random(shape) < 0.3
     if np.issubdtype(dtype, np.floating):
         return RNG.standard_normal(shape).astype(dtype)
     info = np.iinfo(dtype)
@@ -200,6 +202,41 @@ def test_lower_kernel_matches_lower_xla(op):
     np.testing.assert_array_equal(a, b)
 
 
+# ------------------------------------------------------------- boolean lattice
+@pytest.mark.parametrize("op", ("erode", "dilate", "opening", "closing"))
+@pytest.mark.parametrize("se", [(3, 3), (1, 7), (9, 5)])
+def test_bool_agrees_with_u8_255_semantics(op, se):
+    """bool is in the cross-backend dtype matrix: a boolean mask must behave
+    exactly like its uint8 0/255 embedding under every lattice op, on both
+    lowering backends, and keep its dtype."""
+    m = rand((29, 37), np.bool_)
+    expr = op_expr(op, se)
+    u8 = np.asarray(lower_xla(expr)(jnp.asarray(m.astype(np.uint8) * 255)))
+    for lower in (
+        lambda e: lower_xla(e),
+        lambda e: lower_kernel(e, interpret=True),
+    ):
+        got = np.asarray(lower(expr)(jnp.asarray(m)))
+        assert got.dtype == np.bool_
+        np.testing.assert_array_equal(got.astype(np.uint8) * 255, u8)
+
+
+def test_bool_neutral_padding_and_widening():
+    """Erosion pads True, dilation pads False (the boolean neutrals), and a
+    boolean difference widens like the narrow integers do."""
+    from repro.core.types import MAX, MIN
+
+    assert MIN.neutral(np.bool_) == np.True_
+    assert MAX.neutral(np.bool_) == np.False_
+    assert widen_dtype(np.bool_) == np.int32
+    # all-True survives any erosion only because the border is erosion-neutral
+    ones = jnp.ones((8, 8), jnp.bool_)
+    assert bool(np.asarray(lower_xla(X.erode((5, 5)))(ones)).all())
+    # all-False survives any dilation only because the border is dilation-neutral
+    zeros = jnp.zeros((8, 8), jnp.bool_)
+    assert not bool(np.asarray(lower_xla(X.dilate((5, 5)))(zeros)).any())
+
+
 def test_lowering_composed_chain_across_backends():
     x = jnp.asarray(rand((33, 49)))
     expr = X.opening((3, 3)).closing((5, 5)).gradient((3, 3))
@@ -231,7 +268,7 @@ def test_occo_expr_matches_derived():
 
 
 # ------------------------------------------------- cross-path gradient dtypes
-@pytest.mark.parametrize("dtype", [np.uint8, np.int8, np.int32, np.float32])
+@pytest.mark.parametrize("dtype", [np.uint8, np.int8, np.int32, np.float32, np.bool_])
 def test_gradient_dtype_agrees_across_all_paths(dtype):
     x = rand((24, 40), dtype)
     want = widen_dtype(dtype)

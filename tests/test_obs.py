@@ -241,17 +241,18 @@ def test_validator_rejects_malformed_documents():
 
 # ------------------------------------------------------------- stats schema
 SERVICE_STATS_KEYS = {
-    "requests", "batches", "tiled_requests", "bounded_iter", "img_per_s",
-    "p50_ms", "p99_ms", "mean_batch", "occupancy", "cache", "backend",
-    "interpret", "window_ms", "effective_window_ms", "adaptive_window",
-    "resilience", "obs",
+    "requests", "batches", "tiled_requests", "rle_requests", "repr",
+    "bounded_iter", "img_per_s", "p50_ms", "p99_ms", "mean_batch",
+    "occupancy", "cache", "backend", "interpret", "window_ms",
+    "effective_window_ms", "adaptive_window", "resilience", "obs",
 }
 ROUTER_STATS_KEYS = {
     "shards", "healthy_shards", "health", "requests", "batches",
-    "tiled_requests", "img_per_s", "p50_ms", "p99_ms", "cache",
-    "bounded_iter", "resilience", "effective_window_ms", "backend",
-    "interpret", "obs", "per_shard",
+    "tiled_requests", "rle_requests", "repr", "img_per_s", "p50_ms",
+    "p99_ms", "cache", "bounded_iter", "resilience",
+    "effective_window_ms", "backend", "interpret", "obs", "per_shard",
 }
+REPR_KEYS = {"dense", "rle", "density_p50"}
 CACHE_KEYS = {"size", "hits", "misses", "evictions", "hit_rate"}
 BOUNDED_KEYS = {"executions", "iters_used", "iters_budget", "saved_frac"}
 BATCHER_COUNTERS = {
@@ -267,6 +268,7 @@ def test_service_stats_schema_frozen():
     assert set(st) == SERVICE_STATS_KEYS
     assert set(st["cache"]) == CACHE_KEYS
     assert set(st["bounded_iter"]) == BOUNDED_KEYS
+    assert set(st["repr"]) == REPR_KEYS
     assert set(st["resilience"]) == BATCHER_COUNTERS | {"max_queue", "faults"}
     assert st["requests"] == 1
     assert st["obs"] is None  # off by default
@@ -282,6 +284,7 @@ def test_router_stats_schema_frozen_and_consistent():
     assert set(st) == ROUTER_STATS_KEYS
     assert set(st["cache"]) == CACHE_KEYS
     assert set(st["bounded_iter"]) == BOUNDED_KEYS
+    assert set(st["repr"]) == REPR_KEYS
     assert set(st["resilience"]) == BATCHER_COUNTERS | {
         "reroutes", "rewarms", "failovers",
     }
