@@ -158,14 +158,15 @@ def resilience_table(path: str) -> str:
     out = [f"### Resilience ({d['shards']} shards, {d['requests']} requests, "
            f"~{shape}, faulted shard {d['faulted_shard']})", "",
            "| scenario | img/s | p99 ms | completed | healthy shards | "
-           "reroutes | rewarms | retries |",
-           "|---|---|---|---|---|---|---|---|"]
+           "reroutes | slow | hedges | retries |",
+           "|---|---|---|---|---|---|---|---|---|"]
     for r in d["scenarios"]:
         out.append(
             f"| {r['scenario']} | {r['img_s']} | {r['p99_ms']} "
             f"| {r['completed']}/{r['requests']} "
             f"| {r['healthy_shards']}/{r['shards']} "
-            f"| {r['reroutes']} | {r['rewarms']} | {r['retries']} |")
+            f"| {r['reroutes']} | {r.get('slow_shards', 0)} "
+            f"| {r.get('hedges', 0)} | {r['retries']} |")
     ov = d["overhead"]
     out.append("")
     out.append(f"machinery overhead (single service, faults off): "
@@ -174,7 +175,32 @@ def resilience_table(path: str) -> str:
                f"(**{ov['on_vs_off']}x**; acceptance bar >= 0.97x). "
                f"shard_loss is rerouted steady state: the breaker trips "
                f"during the warm pass and every request still completes "
-               f"bit-exact on survivors.")
+               f"bit-exact on survivors. gray_failure is drained steady "
+               f"state: the slow shard is marked from its peer-relative "
+               f"latency EWMA and routed around, breaker closed throughout.")
+    mt = d.get("multi_tenant_overload")
+    if mt:
+        out.append("")
+        out.append(
+            f"### Multi-tenant overload ({mt['overload_factor']}x load, "
+            f"gray shard {mt['gray_shard']} at +{mt['gray_latency_ms']} ms)")
+        out.append("")
+        out.append("| tenant | priority | submitted | completed | "
+                   "shed (typed) | p99 ms | SLO ms | SLO attained |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for name, c in mt["classes"].items():
+            out.append(
+                f"| {name} | {c['priority']} | {c['submitted']} "
+                f"| {c['completed']} | {c['shed_typed']} | {c['p99_ms']} "
+                f"| {c['slo_ms']} | {c['slo_attained']} |")
+        out.append("")
+        out.append(
+            f"gray shard ended `{mt['gray_shard_state']}` with "
+            f"{mt['gray_shard_trips']} breaker trips (slow, never dead); "
+            f"{mt['hedges']} hedges ({mt['hedge_wins']} wins), peak "
+            f"brownout level {mt['brownout_level_peak']}. High-priority "
+            f"SLO is 1.5x the healthy baseline for the same offered load; "
+            f"low-priority sheds typed errors instead of missing quietly.")
     return "\n".join(out)
 
 

@@ -13,11 +13,26 @@ Resilience (see resilience.py for the vocabulary):
 * **Admission control** — ``max_queue`` bounds outstanding (queued +
   in-flight) requests; ``submit`` raises :class:`Overloaded` past it, so
   overload sheds load instead of growing the queue until the host OOMs.
+  Admission is split into ``reserve`` (the atomic accept/reject decision)
+  and ``enqueue`` so the service can charge admission *before* doing any
+  per-request work (the RLE density probe), and release the slot if
+  routing fails.
+* **Tenancy** (ISSUE 9; tenancy.py) — requests carry ``tenant`` and
+  ``priority``. Per-tenant ``TenantQuota.max_outstanding`` rejects with
+  the typed :class:`QuotaExceeded` so one noisy tenant sheds alone, and
+  due groups dispatch in start-time-fair order over tenant weights
+  (``FairScheduler``) instead of plain deadline order, so a flooding
+  tenant cannot monopolize the worker.
+* **Brownout ladder** (tenancy.py) — a load controller over queue depth
+  and the dispatch-latency EWMA degrades in steps: level 1 widens the
+  batching window, level 2 sheds the lowest priority classes with typed
+  :class:`BrownoutShed`, level 3 sheds everything. The old single cliff
+  (``Overloaded`` at ``max_queue``) remains the backstop.
 * **Deadlines** — a request may carry ``req.deadline`` (absolute monotonic
   seconds). A group's dispatch deadline is the *earlier* of its batching
-  window and its most urgent member, due groups dispatch most-urgent-first,
-  and members whose deadline already passed fail with
-  :class:`DeadlineExceeded` instead of occupying the executor.
+  window and its most urgent member, members whose deadline already passed
+  fail with :class:`DeadlineExceeded` instead of occupying the executor,
+  and retry backoff never sleeps past a live member's remaining slack.
 * **Failure isolation** — a failed group retries with exponential backoff
   (``RetryPolicy``; only for ``retryable`` errors), then *bisects*: each
   half re-dispatches independently, recursively, so one poison request
@@ -30,7 +45,8 @@ deadline dispatch that drains below the low-water mark halves the window
 (light load: the latency tax buys nothing), and each dispatch at or above
 the high-water mark doubles it toward the configured max (sustained
 pressure: coalescing pays). Mostly-idle services converge to near-zero
-added latency; saturated ones to full-window occupancy.
+added latency; saturated ones to full-window occupancy. Brownout level 1
+stacks a further multiplier on top.
 """
 from __future__ import annotations
 
@@ -42,13 +58,29 @@ from typing import Any, Callable
 
 from repro.obs import MetricsRegistry
 from repro.serve.morph.resilience import (
+    BrownoutShed,
     DeadlineExceeded,
     Overloaded,
+    QuotaExceeded,
     RetryPolicy,
     ServiceClosed,
 )
+from repro.serve.morph.tenancy import (
+    BrownoutController,
+    BrownoutPolicy,
+    FairScheduler,
+    PRIORITY_NORMAL,
+    TenantQuota,
+)
 
 _STOP = object()
+
+
+def _member(req) -> tuple:
+    """(tenant, priority) of a request; raw test doubles default to the
+    anonymous tenant at normal priority."""
+    return (getattr(req, "tenant", None),
+            getattr(req, "priority", PRIORITY_NORMAL))
 
 
 class MicroBatcher:
@@ -72,6 +104,8 @@ class MicroBatcher:
         min_window_s: float = 0.0,
         max_queue: int | None = None,
         retry: RetryPolicy | None = None,
+        tenants: "dict[str, TenantQuota] | None" = None,
+        brownout: BrownoutPolicy | None = None,
         name: str = "morph-batcher",
         registry: MetricsRegistry | None = None,
         obs=None,
@@ -97,22 +131,38 @@ class MicroBatcher:
         self._outstanding = 0
         self._closed = False
         self._obs = obs  # repro.obs.Observability or None (zero-overhead off)
+        # tenancy: scheduler state is worker-thread-only; the admission-side
+        # per-tenant outstanding map mutates under the cv lock
+        self._scheduler = FairScheduler(tenants)
+        self._tenant_outstanding: dict = {}
+        self._brownout = (
+            BrownoutController(brownout, max_queue)
+            if brownout is not None else None
+        )
         # resilience counters (worker/submit threads; registry counters
         # mutated under the cv lock or the worker thread only)
         reg = registry if registry is not None else MetricsRegistry()
+        self._registry = reg
         self._rejected = reg.counter("batcher.rejected_overloaded")
+        self._rejected_quota = reg.counter("batcher.rejected_quota")
+        self._shed_brownout = reg.counter("batcher.shed_brownout")
         self._expired = reg.counter("batcher.deadline_expired")
         self._retries = reg.counter("batcher.retries")
         self._bisections = reg.counter("batcher.bisections")
         self._request_failures = reg.counter("batcher.request_failures")
+        self._brownout_level = reg.gauge("brownout.level", mode="max")
         self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
         self._thread.start()
 
-    # ------------------------------------------------------------ public API
-    def submit(self, req) -> None:
-        # put() while holding the lock: close() also takes it before
-        # enqueueing _STOP, so a request can never land behind a _STOP the
-        # worker has already consumed (SimpleQueue.put never blocks).
+    # ------------------------------------------------------------ admission
+    def _tenant_counter(self, tenant, event: str):
+        return self._registry.counter(f"tenant.{tenant or '_'}.{event}")
+
+    def reserve(self, tenant: str | None = None,
+                priority: int = PRIORITY_NORMAL) -> None:
+        """Atomically claim one admission slot (global queue bound, tenant
+        quota, brownout ladder) or raise the typed rejection. The caller
+        must follow with exactly one ``enqueue`` or ``release``."""
         with self._cv:
             if self._closed:
                 raise ServiceClosed("service is closed; submit() rejected")
@@ -122,8 +172,65 @@ class MicroBatcher:
                     f"submit queue full ({self._outstanding} outstanding, "
                     f"max_queue={self.max_queue})"
                 )
+            quota = self._scheduler.quota(tenant)
+            held = self._tenant_outstanding.get(tenant, 0)
+            if (
+                quota.max_outstanding is not None
+                and held >= quota.max_outstanding
+            ):
+                self._rejected_quota.inc()
+                self._tenant_counter(tenant, "rejected_quota").inc()
+                raise QuotaExceeded(
+                    f"tenant {tenant!r} at quota ({held} outstanding, "
+                    f"max_outstanding={quota.max_outstanding})",
+                    tenant=tenant,
+                )
+            if self._brownout is not None:
+                level = self._brownout.update(self._outstanding)
+                self._brownout_level.set(level)
+                if self._brownout.sheds(priority):
+                    self._shed_brownout.inc()
+                    self._tenant_counter(tenant, "shed_brownout").inc()
+                    raise BrownoutShed(
+                        f"brownout level {level} shedding priority "
+                        f"{priority} ({self._outstanding} outstanding)",
+                        level=level,
+                        priority=priority,
+                    )
             self._outstanding += 1
+            self._tenant_outstanding[tenant] = held + 1
+
+    def release(self, tenant: str | None = None) -> None:
+        """Return a reserved slot that never made it into the queue
+        (routing raised between reserve and enqueue)."""
+        with self._cv:
+            self._outstanding -= 1
+            self._tenant_outstanding[tenant] = (
+                self._tenant_outstanding.get(tenant, 1) - 1
+            )
+            self._cv.notify_all()
+
+    def enqueue(self, req) -> None:
+        """Queue a request whose slot is already reserved. On failure the
+        caller still holds the slot and must ``release`` it."""
+        # put() while holding the lock: close() also takes it before
+        # enqueueing _STOP, so a request can never land behind a _STOP the
+        # worker has already consumed (SimpleQueue.put never blocks).
+        with self._cv:
+            if self._closed:
+                # raced close() between reserve and enqueue
+                raise ServiceClosed("service is closed; submit() rejected")
             self._q.put(req)
+
+    # ------------------------------------------------------------ public API
+    def submit(self, req) -> None:
+        tenant, priority = _member(req)
+        self.reserve(tenant, priority)
+        try:
+            self.enqueue(req)
+        except BaseException:
+            self.release(tenant)
+            raise
 
     def flush(self, timeout: float | None = None) -> bool:
         """Block until every submitted request has been dispatched."""
@@ -143,13 +250,36 @@ class MicroBatcher:
 
     def counters(self) -> dict:
         with self._cv:
-            return {
+            out = {
                 "rejected_overloaded": self._rejected.value,
+                "rejected_quota": self._rejected_quota.value,
+                "shed_brownout": self._shed_brownout.value,
                 "deadline_expired": self._expired.value,
                 "retries": self._retries.value,
                 "bisections": self._bisections.value,
                 "request_failures": self._request_failures.value,
+                "brownout": (
+                    self._brownout.snapshot()
+                    if self._brownout is not None else None
+                ),
+                "tenants": {
+                    t: {
+                        "outstanding": n,
+                        "rejected_quota": self._tenant_counter(
+                            t, "rejected_quota").value,
+                        "shed_brownout": self._tenant_counter(
+                            t, "shed_brownout").value,
+                        "dispatched": self._tenant_counter(
+                            t, "dispatched").value,
+                    }
+                    for t, n in sorted(
+                        self._tenant_outstanding.items(),
+                        key=lambda kv: str(kv[0]),
+                    )
+                    if t is not None
+                },
             }
+        return out
 
     # ---------------------------------------------------------- worker loop
     def _poll(self, pending: dict, draining: bool):
@@ -167,6 +297,15 @@ class MicroBatcher:
                 return None
         return self._q.get()  # idle: block until work or _STOP arrives
 
+    def _window_now(self) -> float:
+        """The batching window a newly opened group gets: the adaptive
+        window, widened by the brownout ladder under load (level >= 1
+        trades extra latency for occupancy instead of shedding)."""
+        w = self.window_s
+        if self._brownout is not None:
+            w *= self._brownout.window_multiplier()
+        return w
+
     def _loop(self) -> None:
         pending: dict[Any, tuple[float, list]] = {}
         draining = False
@@ -176,7 +315,7 @@ class MicroBatcher:
                 draining = True
             elif item is not None:
                 if item.key not in pending:
-                    pending[item.key] = (time.monotonic() + self.window_s, [])
+                    pending[item.key] = (time.monotonic() + self._window_now(), [])
                 deadline, reqs = pending[item.key]
                 reqs.append(item)
                 # a member more urgent than the batching window pulls the
@@ -191,13 +330,22 @@ class MicroBatcher:
                     if urgent < deadline:
                         pending[item.key] = (urgent, reqs)
             now = time.monotonic()
-            due = [
-                (deadline, key)
+            due = {
+                key: (deadline, [_member(r) for r in reqs])
                 for key, (deadline, reqs) in pending.items()
                 if draining or deadline <= now or len(reqs) >= self.max_batch
-            ]
-            due.sort()  # most urgent group first (deadline-aware ordering)
-            for _, key in due:
+            }
+            # weighted-fair over tenants (min virtual tag first, dispatch
+            # deadline as the urgency tiebreak) — plain deadline order
+            # would let a flooding tenant's groups always cut the line.
+            # One group at a time: each dispatch advances its tenant's
+            # virtual time, which re-ranks the rest of the due set — sorting
+            # the whole set up front would hand a flood the original order.
+            while due:
+                key = self._scheduler.order(
+                    [(d, k, m) for k, (d, m) in due.items()]
+                )[0]
+                del due[key]
                 _, reqs = pending.pop(key)
                 if not draining:  # drain flushes partials; don't learn from it
                     # backlog = work already queued behind this group; at a
@@ -205,6 +353,11 @@ class MicroBatcher:
                     # so size alone could never signal pressure and the window
                     # would absorb at 0 — queued arrivals are the escape
                     self._adapt(len(reqs), backlog=not self._q.empty() or bool(pending))
+                self._scheduler.account([_member(r) for r in reqs])
+                for r in reqs:
+                    tenant = _member(r)[0]
+                    if tenant is not None:
+                        self._tenant_counter(tenant, "dispatched").inc()
                 for i in range(0, len(reqs), self.max_batch):
                     self._dispatch(key, reqs[i : i + self.max_batch])
             # submit() and close() enqueue under one lock, so every request
@@ -261,9 +414,27 @@ class MicroBatcher:
             )
         return live
 
-    def _try_execute(self, key, reqs: list, *, retry: bool) -> BaseException | None:
-        """One dispatch plus bounded retries; returns the final exception or
-        None on success. Only ``retryable`` errors retry."""
+    @staticmethod
+    def _min_slack(reqs: list) -> float | None:
+        """Smallest remaining deadline slack among the group, in seconds;
+        None when no member carries a deadline."""
+        now = time.monotonic()
+        slacks = [
+            r.deadline - now
+            for r in reqs
+            if getattr(r, "deadline", None) is not None
+        ]
+        return min(slacks) if slacks else None
+
+    def _try_execute(
+        self, key, reqs: list, *, retry: bool
+    ) -> tuple[BaseException | None, list]:
+        """One dispatch plus bounded retries; returns ``(exc, live)`` where
+        ``exc`` is the final exception (None on success) and ``live`` the
+        members still unresolved — retries re-drop expired members and cap
+        backoff at the group's remaining deadline slack, so a retry can
+        never sleep a request past its own deadline and then dispatch it
+        anyway."""
         policy = self.retry if retry else None
         attempts = 1 + (policy.max_retries if policy else 0)
         last: BaseException | None = None
@@ -271,9 +442,18 @@ class MicroBatcher:
             span = contextlib.nullcontext()
             backoff = 0.0
             if attempt:
+                # a retry re-enters the queue, effectively: members whose
+                # deadline lapsed during the failed attempt fail fast typed
+                # instead of riding a doomed re-dispatch
+                reqs = self._drop_expired(reqs)
+                if not reqs:
+                    return None, reqs
                 with self._cv:
                     self._retries.inc()
                 backoff = policy.backoff_s(attempt - 1)
+                slack = self._min_slack(reqs)
+                if slack is not None:
+                    backoff = min(backoff, max(0.0, slack))
                 if self._obs is not None:
                     # the retry span covers backoff sleep + re-dispatch, so
                     # chaos traces show where a retried request's time went
@@ -284,13 +464,18 @@ class MicroBatcher:
                 with span:
                     if backoff > 0:
                         time.sleep(backoff)
+                        # the cap above means this only trims the group at
+                        # the boundary where slack ran out mid-sleep
+                        reqs = self._drop_expired(reqs)
+                        if not reqs:
+                            return None, reqs
                     self._execute(key, reqs)
-                return None
+                return None, reqs
             except BaseException as exc:  # noqa: BLE001 — classified below
                 last = exc
                 if not getattr(exc, "retryable", True):
-                    return exc
-        return last
+                    return exc, reqs
+        return last, reqs
 
     def _run_group(self, key, reqs: list, *, retry: bool) -> None:
         """Execute with retry; on persistent failure bisect so only the
@@ -298,8 +483,8 @@ class MicroBatcher:
         reqs = self._drop_expired(reqs)
         if not reqs:
             return
-        exc = self._try_execute(key, reqs, retry=retry)
-        if exc is None:
+        exc, reqs = self._try_execute(key, reqs, retry=retry)
+        if exc is None or not reqs:
             return
         if len(reqs) == 1 or not (self.retry and self.retry.bisect):
             self._fail(reqs, exc)
@@ -322,6 +507,7 @@ class MicroBatcher:
             self._run_group(key, reqs[mid:], retry=False)
 
     def _dispatch(self, key, reqs: list) -> None:
+        t0 = time.monotonic()
         try:
             self._run_group(key, reqs, retry=True)
         except BaseException as exc:  # noqa: BLE001 — belt and braces: never
@@ -329,6 +515,13 @@ class MicroBatcher:
                 if not r.future.done():
                     r.future.set_exception(exc)
         finally:
+            if self._brownout is not None:
+                self._brownout.observe_latency((time.monotonic() - t0) * 1e3)
             with self._cv:
                 self._outstanding -= len(reqs)
+                for r in reqs:
+                    tenant = _member(r)[0]
+                    self._tenant_outstanding[tenant] = (
+                        self._tenant_outstanding.get(tenant, len(reqs)) - 1
+                    )
                 self._cv.notify_all()

@@ -76,6 +76,31 @@ class Overloaded(ServeError):
     retryable = False
 
 
+class QuotaExceeded(Overloaded):
+    """Per-tenant admission control: this tenant is at its
+    ``TenantQuota.max_outstanding``. An ``Overloaded`` that names the
+    tenant, so a noisy tenant sheds alone while the shared queue — and
+    every other tenant — keeps flowing."""
+
+    def __init__(self, message: str, *, tenant: str | None = None, **kw):
+        super().__init__(message, **kw)
+        self.tenant = tenant
+
+
+class BrownoutShed(Overloaded):
+    """Brownout ladder: the load controller is shedding this request's
+    priority class (level 2) or everything (level 3). An ``Overloaded``
+    carrying the active level and the request's priority, so callers can
+    tell "you specifically were downgraded away" from "the queue is
+    full"."""
+
+    def __init__(self, message: str, *, level: int | None = None,
+                 priority: int | None = None, **kw):
+        super().__init__(message, **kw)
+        self.level = level
+        self.priority = priority
+
+
 class DeadlineExceeded(ServeError):
     """The request's deadline passed before (or while) it could dispatch."""
 
@@ -147,11 +172,58 @@ class FailoverPolicy:
     After ``probe_interval_s`` one live request is allowed through as a
     half-open probe — success closes the breaker (the shard's groups return
     home), failure re-opens it and restarts the interval.
+
+    The ``slow_*`` knobs add the gray-failure defense (ISSUE 9): breakers
+    only move on *errors*, so a shard that is slow-but-alive never trips
+    one. The router keeps a per-shard latency EWMA from completed attempts
+    and scores it against the healthy peers' median — a shard reading
+    worse than ``slow_factor`` x the peer median (and above
+    ``slow_min_ms`` absolute, so quiet services don't flag on noise)
+    enters a ``"slow"`` state: new traffic routes away, but every
+    ``slow_probe_interval_s`` one request is let through so the EWMA can
+    decay and the shard can recover. Slow is not dead — the breaker state
+    machine never sees it.
     """
 
     failure_threshold: int = 3
     probe_interval_s: float = 5.0
     rewarm: bool = True  # pre-compile a rerouted group on its survivor
+    # --- slowness-aware health (gray failures) --------------------------
+    slow_detection: bool = True
+    slow_factor: float = 3.0        # x peer-median EWMA that marks "slow"
+    slow_exit_factor: float = 1.5   # recovery threshold (hysteresis)
+    slow_min_ms: float = 10.0       # absolute floor before anyone is slow
+    slow_ewma_alpha: float = 0.25
+    slow_probe_interval_s: float = 0.25
+    # A shard can only be *marked* slow after this many completed attempts
+    # fed its EWMA (recovery has no such gate): a cold EWMA is one sample,
+    # and one compile spike must not read as a gray failure.
+    slow_min_count: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """Tail-latency hedging for the sharded router (ISSUE 9).
+
+    After a request has waited ``delay`` on its primary shard — derived
+    from the observed cross-shard p``quantile`` of request latency, clamped
+    to ``[min_delay_ms, max_delay_ms]`` — the router resubmits it to the
+    next healthy shard with the *same* trace ID; the first result wins and
+    resolves the caller's future exactly once. Hedges are capped per
+    request (``max_hedges``) and the late loser's result is dropped (both
+    lowerings are bit-exact, so which copy wins is unobservable in the
+    payload). Hedging is what bounds the tail when a shard is degraded in
+    the window *before* slow-state detection has drained it.
+    """
+
+    enabled: bool = False
+    quantile: float = 0.99
+    min_delay_ms: float = 5.0
+    max_delay_ms: float = 1000.0
+    max_hedges: int = 1
+    # How long a computed hedge delay is reused before re-reading the
+    # latency histograms (submit-path cost control).
+    refresh_s: float = 1.0
 
 
 # ------------------------------------------------------------ fault injection
@@ -164,8 +236,15 @@ class FaultPlan:
       fail_for)`` raise :class:`InjectedFault` (``fail_for=None`` = forever).
       ``fail_shard`` scopes the failures to one shard of a router (``None``
       = every service the plan reaches).
-    * ``latency_ms`` sleeps before every dispatch (``latency_shard`` scopes
-      it the same way) — the knob for degraded-but-alive experiments.
+    * ``latency_ms`` sleeps before dispatches (``latency_shard`` scopes it
+      the same way) — the knob for degraded-but-alive experiments. The
+      gray-failure clauses (ISSUE 9) shape *which* dispatches pay it:
+      ``latency_after`` starts the slowness at that dispatch ordinal
+      (a shard that degrades mid-traffic, not from birth), and
+      ``latency_every`` makes it intermittent — only ordinals ``n`` with
+      ``(n - latency_after) % latency_every == 0`` sleep (``None`` =
+      every dispatch past ``latency_after``, the persistent gray failure).
+      Both count by dispatch ordinal, so gray chaos replays exactly.
     * ``poison_tags``: any request submitted with a matching ``tag`` raises
       :class:`PoisonedRequest` for the group it rides in; bisection must
       isolate it.
@@ -176,6 +255,8 @@ class FaultPlan:
     fail_for: int | None = None
     latency_ms: float = 0.0
     latency_shard: int | None = None
+    latency_after: int = 0
+    latency_every: int | None = None
     poison_tags: frozenset = frozenset()
 
     def __post_init__(self):
@@ -227,13 +308,24 @@ class FaultInjector:
         self.injected_latency_s = 0.0
         self._lock = threading.Lock()
 
+    def _latency_due(self, n: int) -> bool:
+        """Gray-failure schedule: does dispatch ordinal ``n`` pay the
+        injected latency? (Persistent past ``latency_after``, or every
+        ``latency_every``-th dispatch when intermittent.)"""
+        p = self.plan
+        if n < p.latency_after:
+            return False
+        if p.latency_every is None:
+            return True
+        return (n - p.latency_after) % p.latency_every == 0
+
     def before_dispatch(self, reqs) -> None:
         """Called by the executor with the group about to run; raises the
         scheduled fault (if any) *before* any compute happens."""
         with self._lock:
             n = self.dispatches
             self.dispatches += 1
-        if self.plan.latency_ms > 0.0:
+        if self.plan.latency_ms > 0.0 and self._latency_due(n):
             time.sleep(self.plan.latency_ms / 1e3)
             with self._lock:
                 self.injected_latency_s += self.plan.latency_ms / 1e3
@@ -268,6 +360,8 @@ class FaultInjector:
 __all__ = [
     "ServeError",
     "Overloaded",
+    "QuotaExceeded",
+    "BrownoutShed",
     "DeadlineExceeded",
     "ServiceClosed",
     "ExecutorError",
@@ -276,6 +370,7 @@ __all__ = [
     "ShardUnavailable",
     "RetryPolicy",
     "FailoverPolicy",
+    "HedgePolicy",
     "FaultPlan",
     "FaultInjector",
 ]

@@ -66,8 +66,14 @@ from repro.serve.morph.resilience import (
     FaultInjector,
     FaultPlan,
     FailoverPolicy,
+    HedgePolicy,
     RetryPolicy,
     ServeError,
+)
+from repro.serve.morph.tenancy import (
+    BrownoutPolicy,
+    PRIORITY_NORMAL,
+    TenantQuota,
 )
 from repro.morph.plan_compile import to_plan
 from repro.serve.morph.plans import (
@@ -305,6 +311,20 @@ class ServiceConfig:
     default_deadline_ms: float | None = None
     # Retry-with-backoff then bisect for failed dispatch groups.
     retry: RetryPolicy = RetryPolicy()
+    # --- tenancy + graduated overload (tenancy.py, ISSUE 9) ---------------
+    # Per-tenant admission quotas and fair-share weights; tenants not in
+    # the map get DEFAULT_QUOTA (unbounded, weight 1.0). None = single-
+    # tenant behavior (the map only matters once submit passes tenant=).
+    tenants: "dict[str, TenantQuota] | None" = None
+    # Brownout ladder: widen window -> shed low priority (typed
+    # BrownoutShed) -> shed all, driven by queue depth + dispatch-latency
+    # EWMA. Defaults on: with the default thresholds level 3 can never
+    # fire before max_queue itself, so single-tenant behavior is unchanged.
+    # None disables the ladder entirely.
+    brownout: BrownoutPolicy | None = BrownoutPolicy()
+    # Hedged dispatch policy — read by ShardedMorphService (a lone service
+    # has no second shard to hedge to), default off.
+    hedge: HedgePolicy = HedgePolicy()
     # Circuit breaker / reroute rules — read by ShardedMorphService, inert
     # for a standalone service.
     failover: FailoverPolicy = FailoverPolicy()
@@ -325,6 +345,8 @@ class _Request:
     t_submit: float
     deadline: float | None = None  # absolute monotonic seconds
     tag: str | None = None  # caller label; fault injection poisons by tag
+    tenant: str | None = None  # tenancy: quota + fair-share identity
+    priority: int = PRIORITY_NORMAL  # priority class (lower = more important)
     trace: int | None = None  # obs: request trace ID (minted at submit)
     qspan: Any = None  # obs: open queue-wait span handle
 
@@ -382,6 +404,8 @@ class MorphService:
             min_window_s=self.config.min_window_ms / 1e3,
             max_queue=self.config.max_queue,
             retry=self.config.retry,
+            tenants=self.config.tenants,
+            brownout=self.config.brownout,
             registry=self.metrics,
             obs=self._obs,
         )
@@ -398,6 +422,8 @@ class MorphService:
         *,
         deadline_ms: float | None = None,
         tag: str | None = None,
+        tenant: str | None = None,
+        priority: int = PRIORITY_NORMAL,
         _trace: int | None = None,
     ) -> Future:
         """Plan request; resolves to an array (single-output plans) or a
@@ -408,8 +434,10 @@ class MorphService:
         :class:`DeadlineExceeded` instead of occupying the executor, and an
         urgent request pulls its whole group's dispatch forward. ``tag`` is
         a caller label carried on the request (fault injection poisons by
-        tag; it never affects routing or batching). ``_trace`` is internal:
-        the sharded router threads one trace ID through failover hops."""
+        tag; it never affects routing or batching). ``tenant``/``priority``
+        feed admission (quotas, the brownout ladder) and weighted-fair
+        dispatch order — see tenancy.py. ``_trace`` is internal: the
+        sharded router threads one trace ID through failover hops."""
         plan = get_plan(plan)
         img = np.asarray(img)
         if img.ndim != 2:
@@ -425,30 +453,43 @@ class MorphService:
                     plan=plan.name,
                 )
             deadline = time.monotonic() + deadline_ms / 1e3
-        if self._route_rle(img, plan):
-            # content-gated representation choice: run-domain execution on
-            # exact shapes — no bucket padding, no tiling
-            key, bucket = ("rle", plan, img.dtype.str), None
-        else:
-            bucket = choose_bucket(img.shape[0], img.shape[1], self.config.buckets)
-            if bucket is None:
-                gh, gw = plan.halo()
-                ext = (self.config.tile_interior[0] + 2 * gh,
-                       self.config.tile_interior[1] + 2 * gw)
-                key = ("tiled", plan, ext, img.dtype.str)
-            else:
-                key = ("bucket", plan, bucket, img.dtype.str)
-        req = _Request(key, img, plan, bucket, Future(), time.monotonic(),
-                       deadline=deadline, tag=tag, trace=_trace)
-        if self._obs is not None:
-            self._obs.request_submitted(req, plan.name, bucket, img.dtype.str)
+        # Admission (queue bound, tenant quota, brownout) is charged BEFORE
+        # any routing work: the RLE density probe scans the whole image, and
+        # an overloaded service must shed at the door, not after paying a
+        # per-request O(H*W) probe for a request it then rejects.
+        self._batcher.reserve(tenant, priority)
         try:
-            self._batcher.submit(req)
-        except ServeError as exc:
-            # rejected at admission (Overloaded / ServiceClosed): the queue
-            # span must still close exactly once
+            if self._route_rle(img, plan):
+                # content-gated representation choice: run-domain execution
+                # on exact shapes — no bucket padding, no tiling
+                key, bucket = ("rle", plan, img.dtype.str), None
+            else:
+                bucket = choose_bucket(
+                    img.shape[0], img.shape[1], self.config.buckets
+                )
+                if bucket is None:
+                    gh, gw = plan.halo()
+                    ext = (self.config.tile_interior[0] + 2 * gh,
+                           self.config.tile_interior[1] + 2 * gw)
+                    key = ("tiled", plan, ext, img.dtype.str)
+                else:
+                    key = ("bucket", plan, bucket, img.dtype.str)
+            req = _Request(key, img, plan, bucket, Future(), time.monotonic(),
+                           deadline=deadline, tag=tag, tenant=tenant,
+                           priority=priority, trace=_trace)
             if self._obs is not None:
-                self._obs.request_failed(req, exc)
+                self._obs.request_submitted(req, plan.name, bucket,
+                                            img.dtype.str)
+            try:
+                self._batcher.enqueue(req)
+            except ServeError as exc:
+                # rejected after the span opened (close() raced us): the
+                # queue span must still close exactly once
+                if self._obs is not None:
+                    self._obs.request_failed(req, exc)
+                raise
+        except BaseException:
+            self._batcher.release(tenant)  # slot never reached the queue
             raise
         return req.future
 
@@ -507,11 +548,30 @@ class MorphService:
             )
         return fn
 
+    def _expire_mid_group(self, r) -> bool:
+        """Serial routes (RLE, tiled) execute one request at a time, so a
+        late group member's deadline can lapse while its batch-mates run —
+        fail it typed instead of executing work nobody is waiting for.
+        Returns True when the request was expired."""
+        if r.deadline is None or r.deadline > time.monotonic():
+            return False
+        exc = DeadlineExceeded(
+            "deadline passed mid-group before execution", plan=r.plan.name
+        )
+        self.metrics.counter("batcher.deadline_expired").inc()
+        if self._obs is not None:
+            self._obs.request_failed(r, exc)
+        if not r.future.done():
+            r.future.set_exception(exc)
+        return True
+
     def _execute_rle(self, reqs: list) -> None:
         obs = self._obs
         for r in reqs:
             if r.future.done():
                 continue  # already served before a batch-mate failed a retry
+            if self._expire_mid_group(r):
+                continue
             if self._injector is not None:
                 self._injector.before_dispatch([r])
             span = (obs.group_span("executor", [r], plan=r.plan.name,
@@ -662,6 +722,8 @@ class MorphService:
         for r in reqs:
             if r.future.done():
                 continue  # already served before a batch-mate failed a retry
+            if self._expire_mid_group(r):
+                continue
             if self._injector is not None:
                 self._injector.before_dispatch([r])
             gh, gw = r.plan.halo()

@@ -1,0 +1,261 @@
+"""Tenant-aware overload control for the serving tier (ISSUE 9).
+
+PR 6 gave the serving tier one overload answer: a global ``max_queue``
+that sheds indiscriminately with ``Overloaded``. At a multi-tenant front
+door that is the wrong shape twice over — one noisy tenant can occupy the
+whole admission budget, and the service falls off a single cliff instead
+of degrading. This module holds the three mechanisms the batcher composes
+into a graduated answer:
+
+* :class:`TenantQuota` — per-tenant admission budget (``max_outstanding``)
+  and a fair-share ``weight``. ``ServiceConfig.tenants`` maps tenant name
+  -> quota; tenants not in the map get :data:`DEFAULT_QUOTA` (unbounded,
+  weight 1.0), so quotas are opt-in per tenant, not a registration wall.
+* :class:`FairScheduler` — start-time fair queuing (SFQ) over tenants at
+  dispatch-group granularity. Each tenant carries a virtual time that
+  advances by ``1 / effective_weight`` per dispatched request; due groups
+  dispatch min-tag first. A backlogged tenant's tag holds still while
+  serviced tenants' tags grow past it, which is the classic SFQ liveness
+  argument: any tenant with positive weight is dispatched within a
+  bounded number of rounds (property-tested in tests/test_tenancy.py).
+  Priority classes fold into the weight (each class above doubles the
+  share) rather than forming strict tiers — strict tiers would reintroduce
+  starvation, which shedding already handles better (the brownout ladder
+  drops whole low classes with *typed* errors instead of queueing them to
+  death silently).
+* :class:`BrownoutController` — the load controller behind the brownout
+  ladder. It watches queue depth (outstanding / ``max_queue``) and an EWMA
+  of dispatch latency and degrades in steps instead of PR 6's single
+  cliff:
+
+      level 0  normal
+      level 1  widen the batching window (trade latency for occupancy)
+      level 2  shed the lowest priority classes with typed
+               :class:`~repro.serve.morph.resilience.BrownoutShed`
+      level 3  shed everything (global typed Overloaded behavior)
+
+  Transitions carry hysteresis (exit thresholds sit below entry
+  thresholds) so the ladder doesn't flap at a boundary. The active level
+  is visible in ``stats()["resilience"]["brownout"]``.
+
+Priority classes are small ints, lower = more important:
+:data:`PRIORITY_HIGH` (0), :data:`PRIORITY_NORMAL` (1, the default),
+:data:`PRIORITY_LOW` (2). Anything >= ``BrownoutPolicy.shed_priority``
+sheds first.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PRIORITY_HIGH = 0
+PRIORITY_NORMAL = 1
+PRIORITY_LOW = 2
+
+# Effective-weight multiplier per priority class (index-clamped): one class
+# up doubles the fair share. Folding priority into the weight keeps the
+# scheduler starvation-free for every positive-weight tenant — a strictly
+# tiered sort would let sustained high-priority load park lower classes
+# forever, silently.
+PRIORITY_BOOST = (4.0, 2.0, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Admission budget and fair share for one tenant.
+
+    ``max_outstanding`` bounds this tenant's queued + in-flight requests
+    (``None`` = bounded only by the global ``max_queue``); past it,
+    ``submit`` raises :class:`~repro.serve.morph.resilience.QuotaExceeded`
+    — a typed ``Overloaded`` that names the tenant, so one noisy tenant
+    sheds alone instead of eating the shared budget. ``weight`` is the
+    relative share the fair scheduler grants under contention.
+    """
+
+    max_outstanding: int | None = None
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.max_outstanding is not None and self.max_outstanding < 1:
+            raise ValueError("max_outstanding must be >= 1 (or None)")
+        if self.weight <= 0.0:
+            raise ValueError("weight must be > 0 (use quotas to block a tenant)")
+
+
+DEFAULT_QUOTA = TenantQuota()
+
+
+def effective_weight(quota: TenantQuota, priority: int) -> float:
+    """Tenant weight x priority boost — the rate a tenant's virtual time
+    advances at, and therefore its share of dispatch order under load."""
+    idx = min(max(int(priority), 0), len(PRIORITY_BOOST) - 1)
+    return quota.weight * PRIORITY_BOOST[idx]
+
+
+class FairScheduler:
+    """Start-time fair queuing over tenants, at group granularity.
+
+    Not thread-safe by itself: the batcher calls it only from the worker
+    thread (``order``/``account``); construction-time state is immutable.
+    ``order`` never mutates, so it is also directly drivable by the
+    hypothesis property tests.
+    """
+
+    def __init__(self, tenants: "dict[str, TenantQuota] | None" = None):
+        self.tenants = dict(tenants) if tenants else {}
+        self._vt: dict[str | None, float] = {}
+        # Virtual-time floor: the tag of the most recently dispatched
+        # group. A tenant going idle stops accumulating credit — on return
+        # it re-enters at max(own tag, floor), the standard SFQ rule that
+        # stops an idle tenant from bursting ahead of everyone.
+        self._floor = 0.0
+
+    def quota(self, tenant: str | None) -> TenantQuota:
+        return self.tenants.get(tenant, DEFAULT_QUOTA)
+
+    def tag(self, tenant: str | None) -> float:
+        return max(self._vt.get(tenant, 0.0), self._floor)
+
+    def group_key(self, members: "list[tuple[str | None, int]]",
+                  deadline: float) -> tuple:
+        """Sort key for one due group: min member tag first (weighted-fair),
+        dispatch deadline as the tiebreak (urgency within equal fairness)."""
+        vt = min((self.tag(t) for t, _ in members), default=self._floor)
+        return (vt, deadline)
+
+    def order(self, items):
+        """Order due groups for dispatch. ``items`` is an iterable of
+        ``(deadline, key, members)`` with ``members = [(tenant, priority)]``;
+        returns the keys, most-deserving group first."""
+        return [
+            key for _, key, _ in sorted(
+                items, key=lambda it: self.group_key(it[2], it[0])
+            )
+        ]
+
+    def account(self, members: "list[tuple[str | None, int]]") -> None:
+        """Charge one dispatched group: each member advances its tenant's
+        virtual time by ``1 / effective_weight`` and the floor rises to the
+        group's tag."""
+        if members:
+            self._floor = min(self.tag(t) for t, _ in members)
+        for tenant, priority in members:
+            w = effective_weight(self.quota(tenant), priority)
+            self._vt[tenant] = self.tag(tenant) + 1.0 / w
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutPolicy:
+    """Thresholds for the brownout ladder, as fractions of ``max_queue``
+    (queue depth is the primary signal; with ``max_queue=None`` only the
+    latency trigger can escalate).
+
+    ``latency_ms`` optionally escalates one extra level whenever the
+    dispatch-latency EWMA exceeds it — the queue can look shallow while
+    every dispatch is slow (the single-service face of a gray failure).
+    """
+
+    enter_widen: float = 0.50   # level 1: widen the batching window
+    enter_shed: float = 0.75    # level 2: shed priority >= shed_priority
+    enter_global: float = 0.95  # level 3: shed everything
+    hysteresis: float = 0.10    # exit = enter - hysteresis (no flapping)
+    shed_priority: int = PRIORITY_LOW
+    window_widen: float = 2.0   # level >= 1 window multiplier
+    latency_ms: float | None = None
+    latency_alpha: float = 0.2
+
+    def __post_init__(self):
+        if not 0.0 < self.enter_widen <= self.enter_shed <= self.enter_global:
+            raise ValueError("brownout thresholds must be ordered and > 0")
+        if self.hysteresis < 0.0:
+            raise ValueError("hysteresis must be >= 0")
+
+
+class BrownoutController:
+    """Mutable ladder state over one :class:`BrownoutPolicy`.
+
+    ``update(outstanding)`` is called under the batcher's admission lock
+    (submit path); ``observe_latency`` from the worker thread. The level
+    is a plain int read — torn reads are impossible under the GIL and a
+    one-request-late transition is harmless.
+    """
+
+    def __init__(self, policy: BrownoutPolicy, max_queue: int | None):
+        self.policy = policy
+        self.max_queue = max_queue
+        self.level = 0
+        self.transitions = 0
+        self._latency_ewma_ms: float | None = None
+
+    def observe_latency(self, ms: float) -> None:
+        a = self.policy.latency_alpha
+        prev = self._latency_ewma_ms
+        self._latency_ewma_ms = ms if prev is None else (1 - a) * prev + a * ms
+
+    @property
+    def latency_ewma_ms(self) -> float | None:
+        return self._latency_ewma_ms
+
+    def _level_for(self, frac: float) -> int:
+        p = self.policy
+        enters = (p.enter_widen, p.enter_shed, p.enter_global)
+        level = 0
+        for i, enter in enumerate(enters, start=1):
+            # hysteresis: a level already held only releases below its
+            # exit threshold, so the ladder doesn't flap at a boundary
+            threshold = enter - (p.hysteresis if self.level >= i else 0.0)
+            if frac >= threshold:
+                level = i
+        return level
+
+    def update(self, outstanding: int) -> int:
+        """Recompute and return the active level from current queue depth
+        (plus the latency escalation, when configured)."""
+        frac = (
+            outstanding / self.max_queue
+            if self.max_queue else 0.0
+        )
+        level = self._level_for(frac)
+        p = self.policy
+        if (
+            p.latency_ms is not None
+            and self._latency_ewma_ms is not None
+            and self._latency_ewma_ms >= p.latency_ms
+        ):
+            level = min(level + 1, 3)
+        if level != self.level:
+            self.transitions += 1
+            self.level = level
+        return level
+
+    def window_multiplier(self) -> float:
+        return self.policy.window_widen if self.level >= 1 else 1.0
+
+    def sheds(self, priority: int) -> bool:
+        """Would the active level shed a request of this priority class?"""
+        if self.level >= 3:
+            return True
+        return self.level >= 2 and priority >= self.policy.shed_priority
+
+    def snapshot(self) -> dict:
+        return {
+            "level": self.level,
+            "transitions": self.transitions,
+            "latency_ewma_ms": (
+                round(self._latency_ewma_ms, 3)
+                if self._latency_ewma_ms is not None else None
+            ),
+        }
+
+
+__all__ = [
+    "PRIORITY_HIGH",
+    "PRIORITY_NORMAL",
+    "PRIORITY_LOW",
+    "PRIORITY_BOOST",
+    "TenantQuota",
+    "DEFAULT_QUOTA",
+    "effective_weight",
+    "FairScheduler",
+    "BrownoutPolicy",
+    "BrownoutController",
+]

@@ -31,6 +31,24 @@ rerouted result); request-level failures (deadline, poison, overload)
 propagate typed to the caller and never move the breaker. ``stats()``
 surfaces per-shard health and the reroute/rewarm/probe counters.
 
+Gray-failure defense (ISSUE 9): a shard that is *slow but alive* never
+trips the error-driven breaker, so two further mechanisms cover it.
+**Slow-state health** — every successful attempt feeds a per-shard
+residence-latency EWMA; a shard whose EWMA exceeds
+``failover.slow_factor`` times the peer median (and ``slow_min_ms``)
+is marked ``"slow"``: new traffic routes away exactly like a reroute,
+but the breaker does not move and the shard is never declared dead — a
+trickle probe (one request per ``slow_probe_interval_s``) keeps its EWMA
+fresh so recovery (below ``slow_exit_factor`` x median) is observable.
+**Hedged dispatch** (``ServiceConfig.hedge``) — after a p99-derived delay
+read from the merged latency histograms, a still-unresolved request is
+resubmitted to the next healthy shard; first result wins, the caller's
+future resolves exactly once (a per-request lock arbitrates the race),
+and the router's own ``requests`` count ticks once per caller request no
+matter how many shards raced on it. Both are driven by the replayable
+chaos harness via ``FaultPlan``'s gray clauses (``latency_after`` /
+``latency_every``).
+
 Tiled (oversized) traffic routes the same way; each shard's device-side
 tile gather (serve/morph/tiling.py) keeps it off the host. For one giant
 image where *latency* matters more than engine throughput, use
@@ -77,6 +95,7 @@ from repro.serve.morph.resilience import (
     ShardUnavailable,
 )
 from repro.serve.morph.service import MorphService, ServiceConfig
+from repro.serve.morph.tenancy import PRIORITY_NORMAL
 
 # Failures that indict the *shard* (move its breaker); everything else —
 # deadline, poison, overload, closed — is about the request or the caller
@@ -96,15 +115,49 @@ class _ShardHealth:
         self.trips = 0
         self.probes = 0
         self.recoveries = 0
+        # slow-state (gray-failure) tracking — orthogonal to the breaker:
+        # `state` only ever moves on errors, `slow` only on latency
+        self.latency_ewma_ms: float | None = None
+        self.latency_samples = 0
+        self.slow = False
+        self.last_slow_probe = 0.0
+        self.samples_at_mark = 0
+        self.slow_marks = 0
+        self.slow_recoveries = 0
 
     def snapshot(self) -> dict:
+        state = "half-open" if self.probing else self.state
+        if state == "closed" and self.slow:
+            state = "slow"  # alive, deprioritized — never "open"
         return {
-            "state": "half-open" if self.probing else self.state,
+            "state": state,
             "consecutive_failures": self.consecutive_failures,
             "trips": self.trips,
             "probes": self.probes,
             "recoveries": self.recoveries,
+            "slow": self.slow,
+            "slow_marks": self.slow_marks,
+            "slow_recoveries": self.slow_recoveries,
+            "latency_ewma_ms": (
+                round(self.latency_ewma_ms, 3)
+                if self.latency_ewma_ms is not None else None
+            ),
         }
+
+
+class _RequestCtx:
+    """Per-caller-request arbitration state: exactly-once resolution of the
+    outer future across the primary chain and any hedges, plus the hedge
+    timer and the set of shards already racing on this request."""
+
+    __slots__ = ("lock", "resolved", "hedges", "timer", "tried")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.resolved = False
+        self.hedges = 0
+        self.timer: threading.Timer | None = None
+        self.tried: set[int] = set()
 
 
 class ShardedMorphService:
@@ -153,6 +206,13 @@ class ShardedMorphService:
         self.reroutes = 0
         self.rewarms = 0
         self.failovers = 0  # breaker trips observed at routing level
+        # hedging (ISSUE 9): counters + the cached p99-derived delay
+        self.hedges = 0
+        self.hedge_wins = 0
+        self._requests_ok = 0  # caller requests resolved with a result —
+        # ticks once per request however many shards raced on it, which is
+        # what keeps stats()["requests"] single-count under hedging
+        self._hedge_delay = (0.0, 0.0)  # (delay_ms, computed_at)
 
     # ------------------------------------------------------------- routing
     @staticmethod
@@ -184,10 +244,21 @@ class ShardedMorphService:
             hp = self._health[primary]
             if primary not in excluded:
                 if hp.state == "closed":
-                    return primary, False
+                    if not hp.slow:
+                        return primary, False
+                    # slow primary: a trickle probe keeps its latency EWMA
+                    # fed, so recovery is observable — otherwise the shard
+                    # drains and its last (inflated) EWMA pins it slow
+                    # forever; everything else reroutes away below
+                    if (
+                        now - hp.last_slow_probe
+                        >= self.failover.slow_probe_interval_s
+                    ):
+                        hp.last_slow_probe = now
+                        return primary, False
                 # broken primary: probe it if the interval elapsed and no
                 # probe is already in flight
-                if (
+                elif (
                     not hp.probing
                     and hp.opened_at is not None
                     and now - hp.opened_at >= self.failover.probe_interval_s
@@ -195,11 +266,17 @@ class ShardedMorphService:
                     hp.probing = True
                     hp.probes += 1
                     return primary, True
-            survivors = [
+            candidates = [
                 i for i in range(n)
                 if i not in excluded and i != primary and self._healthy(i)
             ]
+            # prefer survivors that aren't themselves slow; slowness never
+            # makes a group unroutable (slow < dead, by construction)
+            fast = [i for i in candidates if not self._health[i].slow]
+            survivors = fast or candidates
             if not survivors:
+                if primary not in excluded and hp.state == "closed":
+                    return primary, False  # slow primary beats nothing
                 raise ShardUnavailable(
                     f"no healthy shard for group (primary {primary} "
                     f"{hp.state}, {len(excluded)} excluded of {n})"
@@ -217,6 +294,132 @@ class ShardedMorphService:
                 h.state = "closed"
                 h.opened_at = None
                 h.recoveries += 1
+
+    # ------------------------------------------------- slow-state (gray)
+    def _observe_latency(self, idx: int, ms: float) -> None:
+        """Feed one successful attempt's residence latency (submit to
+        resolution, queue wait included — that is what the caller feels)
+        into the shard's EWMA, then re-score every shard against the peer
+        median. Errors never reach here: the breaker owns those."""
+        fo = self.failover
+        if not fo.slow_detection:
+            return
+        with self._hlock:
+            h = self._health[idx]
+            a = fo.slow_ewma_alpha
+            h.latency_ewma_ms = (
+                ms if h.latency_ewma_ms is None
+                else (1.0 - a) * h.latency_ewma_ms + a * ms
+            )
+            h.latency_samples += 1
+            self._rescore_slow_locked()
+
+    def _rescore_slow_locked(self) -> None:
+        """Under _hlock: mark/unmark slow by comparing each shard's EWMA to
+        the median over breaker-closed shards with data. Peer-relative
+        scoring is the point — an absolute threshold can't tell a slow
+        shard from a slow traffic mix, but one outlier against its own
+        peers on the same mix is a gray failure."""
+        fo = self.failover
+        # only settled EWMAs join the peer pool — the bar is symmetric with
+        # being markable: a survivor's single compile-spike sample must not
+        # drag the median up and un-mark a genuinely slow shard
+        vals = sorted(
+            h.latency_ewma_ms for h in self._health
+            if h.latency_ewma_ms is not None and h.state == "closed"
+            and h.latency_samples >= fo.slow_min_count
+        )
+        if len(vals) < 2:
+            return  # one data point has no peers to be slow against
+        # lower-middle median: with few reporting shards the upper middle
+        # can BE the outlier (2 shards: upper median = max, and nothing
+        # could ever score slow against itself)
+        median = vals[(len(vals) - 1) // 2]
+        for h in self._health:
+            e = h.latency_ewma_ms
+            if e is None:
+                continue
+            if not h.slow:
+                if (
+                    h.latency_samples >= fo.slow_min_count
+                    and e > fo.slow_factor * median
+                    and e > fo.slow_min_ms
+                ):
+                    h.slow = True
+                    h.slow_marks += 1
+                    h.samples_at_mark = h.latency_samples
+                    # trickle probing starts one full interval from the
+                    # mark (not from process start): the first drained
+                    # requests all reroute, then one probe feeds the EWMA
+                    h.last_slow_probe = time.monotonic()
+            elif (
+                # recovery takes evidence from the shard itself (a probe or
+                # hedge completion since the mark) — a drained shard's
+                # frozen EWMA must not "recover" just because its peers'
+                # median drifted up under load
+                h.latency_samples > h.samples_at_mark
+                and (e <= fo.slow_exit_factor * median or e <= fo.slow_min_ms)
+            ):
+                h.slow = False
+                h.slow_recoveries += 1
+
+    # --------------------------------------------------------- hedging
+    def _hedge_delay_s(self) -> float:
+        """The hedge trigger delay: the configured quantile of the merged
+        cross-shard latency histogram, clamped to the policy's bounds and
+        cached for ``refresh_s`` (the merge walks every shard registry).
+        Calibration debt: derived from completed-request latency, which
+        under-reads while a gray shard is still holding its requests —
+        recorded in ROADMAP."""
+        policy = self.config.hedge
+        now = time.monotonic()
+        delay_ms, at = self._hedge_delay
+        if now - at < policy.refresh_s and at > 0.0:
+            return delay_ms / 1e3
+        lat = self.metrics_snapshot().get("latency_ms")
+        q = quantile_from_snapshot(lat, policy.quantile) if lat else 0.0
+        delay_ms = min(max(q, policy.min_delay_ms), policy.max_delay_ms)
+        self._hedge_delay = (delay_ms, now)
+        return delay_ms / 1e3
+
+    def _resolve(self, ctx: _RequestCtx, outer: Future, *,
+                 exc: BaseException | None = None, result=None) -> bool:
+        """Resolve the caller's future exactly once across every racing
+        attempt; returns True for the attempt that won."""
+        with ctx.lock:
+            if ctx.resolved:
+                return False
+            ctx.resolved = True
+            timer, ctx.timer = ctx.timer, None
+        if timer is not None:
+            timer.cancel()
+        if exc is not None:
+            outer.set_exception(exc)
+        else:
+            with self._hlock:
+                self._requests_ok += 1
+            outer.set_result(result)
+        return True
+
+    def _hedge(self, ctx: _RequestCtx, outer: Future, img, plan: Plan,
+               token: bytes, deadline_at: float | None, tag: str | None,
+               tenant: str | None, priority: int, trace: int | None) -> None:
+        """Timer body: the primary chain is still unresolved after the
+        hedge delay — race a duplicate on the next healthy shard."""
+        with ctx.lock:
+            if ctx.resolved:
+                return
+            ctx.hedges += 1
+            ctx.timer = None
+        with self._hlock:
+            self.hedges += 1
+        if self._obs is not None:
+            self._obs.instant(
+                "hedge", trace=trace, plan=plan.name, tried=sorted(ctx.tried)
+            )
+        self._attempt(outer, img, plan, token, deadline_at, tag,
+                      frozenset(ctx.tried), trace, ctx=ctx, hedge=True,
+                      tenant=tenant, priority=priority)
 
     def _record_failure(self, idx: int, was_probe: bool) -> list:
         """Count a shard-level failure; on breaker trip, return the rewarm
@@ -292,7 +495,9 @@ class ShardedMorphService:
         return self.submit_plan(img, single_op_plan(op, se), **kw)
 
     def submit_plan(self, img, plan: "str | Plan", *,
-                    deadline_ms: float | None = None, tag: str | None = None):
+                    deadline_ms: float | None = None, tag: str | None = None,
+                    tenant: str | None = None,
+                    priority: int = PRIORITY_NORMAL):
         plan = get_plan(plan)
         img = np.asarray(img)
         if img.ndim != 2:
@@ -309,25 +514,33 @@ class ShardedMorphService:
         )
         outer: Future = Future()
         # one trace ID per caller request, minted here so it survives every
-        # failover hop (shards see it via _trace and must not re-mint)
+        # failover hop and hedge (shards see it via _trace and must not
+        # re-mint — which is also what keeps per-request obs single-count)
         trace = new_trace_id() if self._obs is not None else None
+        ctx = _RequestCtx()
         self._attempt(outer, img, plan, token, deadline_at, tag, frozenset(),
-                      trace)
+                      trace, ctx=ctx, tenant=tenant, priority=priority)
         return outer
 
     def _attempt(self, outer: Future, img, plan: Plan, token: bytes,
                  deadline_at: float | None, tag: str | None,
-                 excluded: frozenset, trace: int | None = None) -> None:
+                 excluded: frozenset, trace: int | None = None, *,
+                 ctx: _RequestCtx, hedge: bool = False,
+                 tenant: str | None = None,
+                 priority: int = PRIORITY_NORMAL) -> None:
         """Route one attempt; the done callback reroutes shard-level
         failures to the next survivor until every shard has been tried, so
         the caller's future always resolves — with the rerouted result or a
-        typed error."""
+        typed error. A ``hedge`` attempt is opportunistic: only a result
+        may resolve the caller (through ``_resolve``, exactly once); its
+        failures still feed shard health but neither recurse nor resolve —
+        the primary chain stays authoritative for errors."""
         deadline_ms = None
         if deadline_at is not None:
             deadline_ms = (deadline_at - time.monotonic()) * 1e3
             if deadline_ms <= 0:
-                if not outer.done():
-                    outer.set_exception(DeadlineExceeded(
+                if not hedge:
+                    self._resolve(ctx, outer, exc=DeadlineExceeded(
                         "deadline expired during failover", plan=plan.name))
                 return
         try:
@@ -338,44 +551,50 @@ class ShardedMorphService:
                     "unroutable", trace=trace, plan=plan.name,
                     excluded=sorted(excluded), error=type(exc).__name__,
                 )
-            if not outer.done():
-                outer.set_exception(exc)
+            if not hedge:
+                self._resolve(ctx, outer, exc=exc)
             return
+        ctx.tried.add(idx)
         # the hop span covers shard submit through future resolution — its
         # duration is this attempt's full shard-side residence time
         tracer = self._obs.tracer if self._obs is not None else None
         hop = (
             tracer.begin("hop", trace=trace, shard=idx, probe=was_probe,
-                         plan=plan.name, attempt=len(excluded))
+                         plan=plan.name, attempt=len(excluded), hedge=hedge)
             if tracer is not None else None
         )
+        t0 = time.monotonic()
         try:
             fut = self.shards[idx].submit_plan(
-                img, plan, deadline_ms=deadline_ms, tag=tag, _trace=trace
+                img, plan, deadline_ms=deadline_ms, tag=tag, _trace=trace,
+                tenant=tenant, priority=priority,
             )
         except ServeError as exc:
             if hop is not None:
                 tracer.end(hop, error=type(exc).__name__)
-            # submit-time rejection (Overloaded, ServiceClosed): back-
-            # pressure or shutdown, not a shard fault — shedding load is the
-            # point, don't spread the spill. Resolve the caller's future
-            # (this path may run inside a done callback, where a raise
-            # would vanish into the futures machinery and hang the caller).
+            # submit-time rejection (Overloaded, QuotaExceeded, brownout,
+            # ServiceClosed): back-pressure or shutdown, not a shard fault —
+            # shedding load is the point, don't spread the spill. Resolve
+            # the caller's future (this path may run inside a done callback,
+            # where a raise would vanish into the futures machinery and hang
+            # the caller).
             if was_probe:
                 with self._hlock:
                     self._health[idx].probing = False
-            if not outer.done():
-                outer.set_exception(exc)
+            if not hedge:
+                self._resolve(ctx, outer, exc=exc)
             return
 
-        def done(f, idx=idx, was_probe=was_probe, hop=hop):
+        def done(f, idx=idx, was_probe=was_probe, hop=hop, t0=t0):
             exc = f.exception()
             if hop is not None:
                 tracer.end(hop, error=type(exc).__name__ if exc else None)
             if exc is None:
                 self._record_success(idx, was_probe)
-                if not outer.done():
-                    outer.set_result(f.result())
+                self._observe_latency(idx, (time.monotonic() - t0) * 1e3)
+                if self._resolve(ctx, outer, result=f.result()) and hedge:
+                    with self._hlock:
+                        self.hedge_wins += 1
             elif isinstance(exc, SHARD_LEVEL_ERRORS):
                 rewarm = self._record_failure(idx, was_probe)
                 self._rewarm_async(rewarm)
@@ -383,19 +602,41 @@ class ShardedMorphService:
                 if self._obs is not None:
                     self._obs.instant(
                         "failover", trace=trace, shard=idx,
-                        error=type(exc).__name__,
+                        error=type(exc).__name__, hedge=hedge,
                         exhausted=len(nxt) >= len(self.shards),
                     )
+                if hedge:
+                    return  # health recorded; the primary chain owns errors
                 if len(nxt) < len(self.shards):
                     self._attempt(outer, img, plan, token, deadline_at, tag,
-                                  nxt, trace)
-                elif not outer.done():
-                    outer.set_exception(exc)
+                                  nxt, trace, ctx=ctx, tenant=tenant,
+                                  priority=priority)
+                else:
+                    self._resolve(ctx, outer, exc=exc)
             else:  # request-level failure: typed, final, shard not indicted
-                if not outer.done():
-                    outer.set_exception(exc)
+                if not hedge:
+                    self._resolve(ctx, outer, exc=exc)
 
         fut.add_done_callback(done)
+        # arm (or re-arm, for multi-hedge policies) the hedge timer once a
+        # real attempt is in flight and a second shard exists to race on
+        policy = self.config.hedge
+        if (
+            policy.enabled
+            and len(self.shards) > 1
+            and ctx.hedges < policy.max_hedges
+        ):
+            with ctx.lock:
+                if ctx.resolved or ctx.timer is not None:
+                    return
+                timer = threading.Timer(
+                    self._hedge_delay_s(), self._hedge,
+                    args=(ctx, outer, img, plan, token, deadline_at, tag,
+                          tenant, priority, trace),
+                )
+                timer.daemon = True
+                ctx.timer = timer
+            timer.start()
 
     def submit_expr(self, img, expr, name: str | None = None, **kw):
         from repro.morph.plan_compile import to_plan
@@ -454,23 +695,43 @@ class ShardedMorphService:
         }
         resilience = {
             k: value(f"batcher.{k}")
-            for k in ("rejected_overloaded", "deadline_expired", "retries",
-                      "bisections", "request_failures")
+            for k in ("rejected_overloaded", "rejected_quota", "shed_brownout",
+                      "deadline_expired", "retries", "bisections",
+                      "request_failures")
         }
+        # worst shard's active brownout level (the gauge merges with max)
+        resilience["brownout_level"] = value("brownout.level")
+        # per-tenant counters merge by name across shards; rebuild the map
+        tenants: dict[str, dict] = {}
+        for name, m in merged.items():
+            if not name.startswith("tenant."):
+                continue
+            t, event = name[len("tenant."):].rsplit(".", 1)
+            if t != "_":  # the anonymous tenant stays out of the map
+                tenants.setdefault(t, {})[event] = m["value"]
+        resilience["tenants"] = tenants
         with self._hlock:
             health = [h.snapshot() for h in self._health]
             resilience.update(
                 reroutes=self.reroutes,
                 rewarms=self.rewarms,
                 failovers=self.failovers,
+                hedges=self.hedges,
+                hedge_wins=self.hedge_wins,
+                hedge_delay_ms=self._hedge_delay[0],
             )
+            requests_ok = self._requests_ok
         lat = merged.get("latency_ms")
         dens = merged.get("rle.density")
         return {
             "shards": len(self.shards),
             "healthy_shards": sum(h["state"] == "closed" for h in health),
+            "slow_shards": sum(h["state"] == "slow" for h in health),
             "health": health,
-            "requests": value("requests"),
+            # the router's own resolved-with-a-result count: one tick per
+            # caller request however many shards raced on it under hedging
+            # (per-shard "requests" counters still count shard-side work)
+            "requests": requests_ok,
             "batches": value("batches"),
             "tiled_requests": value("tiled_requests"),
             "rle_requests": value("rle_requests"),

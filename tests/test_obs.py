@@ -247,17 +247,17 @@ SERVICE_STATS_KEYS = {
     "effective_window_ms", "adaptive_window", "resilience", "obs",
 }
 ROUTER_STATS_KEYS = {
-    "shards", "healthy_shards", "health", "requests", "batches",
-    "tiled_requests", "rle_requests", "repr", "img_per_s", "p50_ms",
-    "p99_ms", "cache", "bounded_iter", "resilience",
+    "shards", "healthy_shards", "slow_shards", "health", "requests",
+    "batches", "tiled_requests", "rle_requests", "repr", "img_per_s",
+    "p50_ms", "p99_ms", "cache", "bounded_iter", "resilience",
     "effective_window_ms", "backend", "interpret", "obs", "per_shard",
 }
 REPR_KEYS = {"dense", "rle", "density_p50"}
 CACHE_KEYS = {"size", "hits", "misses", "evictions", "hit_rate"}
 BOUNDED_KEYS = {"executions", "iters_used", "iters_budget", "saved_frac"}
 BATCHER_COUNTERS = {
-    "rejected_overloaded", "deadline_expired", "retries", "bisections",
-    "request_failures",
+    "rejected_overloaded", "rejected_quota", "shed_brownout",
+    "deadline_expired", "retries", "bisections", "request_failures",
 }
 
 
@@ -269,7 +269,9 @@ def test_service_stats_schema_frozen():
     assert set(st["cache"]) == CACHE_KEYS
     assert set(st["bounded_iter"]) == BOUNDED_KEYS
     assert set(st["repr"]) == REPR_KEYS
-    assert set(st["resilience"]) == BATCHER_COUNTERS | {"max_queue", "faults"}
+    assert set(st["resilience"]) == BATCHER_COUNTERS | {
+        "max_queue", "faults", "brownout", "tenants",
+    }
     assert st["requests"] == 1
     assert st["obs"] is None  # off by default
     assert st["p50_ms"] > 0.0
@@ -286,7 +288,8 @@ def test_router_stats_schema_frozen_and_consistent():
     assert set(st["bounded_iter"]) == BOUNDED_KEYS
     assert set(st["repr"]) == REPR_KEYS
     assert set(st["resilience"]) == BATCHER_COUNTERS | {
-        "reroutes", "rewarms", "failovers",
+        "reroutes", "rewarms", "failovers", "hedges", "hedge_wins",
+        "hedge_delay_ms", "brownout_level", "tenants",
     }
     assert set(st["per_shard"][0]) == SERVICE_STATS_KEYS
     # the by-type merge must agree with summing the per-shard views
@@ -362,7 +365,10 @@ def test_single_service_trace_and_profile():
     assert st["obs"]["profiled_keys"] == 1
 
 
-def test_queue_span_closes_on_submit_rejection():
+def test_submit_rejection_leaves_no_open_spans():
+    """Admission rejects before the queue span (or the RLE density probe)
+    exists, so shed requests cost nothing in the tracer — but they stay
+    observable through the admission counters, and nothing leaks."""
     c = cfg(obs=ObsConfig(), max_queue=1, window_ms=50.0)
     with MorphService(c) as svc:
         futs = []
@@ -381,7 +387,8 @@ def test_queue_span_closes_on_submit_rejection():
             e for e in svc.export_trace()["traceEvents"]
             if e["name"] == "queue" and e["args"].get("error")
         ]
-        assert len(errs) == rejected
+        assert errs == []  # never opened, nothing to error-close
+        assert svc.stats()["resilience"]["rejected_overloaded"] == rejected
 
 
 # ----------------------------------------------------- chaos trace replay

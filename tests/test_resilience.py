@@ -37,7 +37,9 @@ from repro.serve.morph import (
     DeadlineExceeded,
     ExecutorError,
     FailoverPolicy,
+    FaultInjector,
     FaultPlan,
+    HedgePolicy,
     InjectedFault,
     MicroBatcher,
     MorphService,
@@ -519,9 +521,11 @@ def test_router_stats_surface_health_block():
     for h in stats["health"]:
         assert h["state"] == "closed"
         assert set(h) == {"state", "consecutive_failures", "trips", "probes",
-                          "recoveries"}
+                          "recoveries", "slow", "slow_marks",
+                          "slow_recoveries", "latency_ewma_ms"}
     for k in ("reroutes", "rewarms", "failovers", "retries", "bisections",
-              "rejected_overloaded", "deadline_expired", "request_failures"):
+              "rejected_overloaded", "rejected_quota", "shed_brownout",
+              "deadline_expired", "request_failures", "hedges", "hedge_wins"):
         assert k in stats["resilience"]
 
 
@@ -533,3 +537,135 @@ def test_router_close_idempotent_and_submit_after_close():
     f = svc.submit_plan(rand(), ERODE5)
     with pytest.raises(ServiceClosed):
         f.result(timeout=60)
+
+
+# ------------------------------------------------- gray failures (ISSUE 9)
+def peer_plan():
+    """A plan whose group routes to a different primary shard than ERODE5,
+    so a second shard accumulates latency samples (peer-relative slow
+    scoring needs at least two reporting shards)."""
+    for op in ("dilate", "opening", "closing"):
+        idx = primary_index(op, (64, 64), np.dtype(np.uint8).str, N_LOGICAL)
+        if idx != E5_PRIMARY:
+            return single_op_plan(op, (5, 5))
+    raise AssertionError("no plan maps off the erode primary")  # pragma: no cover
+
+
+def test_gray_latency_clauses_are_deterministic():
+    """latency_after/latency_every count by dispatch ordinal — the same
+    plan replays the exact same gray schedule, run after run."""
+    inj = FaultInjector(FaultPlan(latency_ms=1.0, latency_after=2,
+                                  latency_every=3))
+    assert [inj._latency_due(n) for n in range(8)] == [
+        False, False, True, False, False, True, False, False]
+    # persistent clause: every dispatch from latency_after onward pays
+    inj2 = FaultInjector(FaultPlan(latency_ms=1.0, latency_after=3))
+    assert [inj2._latency_due(n) for n in range(6)] == [
+        False, False, False, True, True, True]
+    # the schedule is a pure function of the ordinal: a replay matches
+    replay = FaultInjector(FaultPlan(latency_ms=1.0, latency_after=2,
+                                     latency_every=3))
+    assert [replay._latency_due(n) for n in range(8)] == [
+        inj._latency_due(n) for n in range(8)]
+
+
+def test_slow_shard_marked_and_drained_without_breaker():
+    """A persistently slow (but correct) shard is marked "slow" from its
+    peer-relative latency EWMA and drained of traffic — breaker closed the
+    whole time, never "open", zero trips."""
+    c = cfg(window_ms=1.0, retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(slow_min_count=4, slow_min_ms=5.0,
+                                    slow_probe_interval_s=600.0),
+            faults=FaultPlan(latency_ms=80.0, latency_shard=E5_PRIMARY))
+    img = rand()
+    ref = np.asarray(erode(img, (5, 5)))
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        # peer baseline on a healthy shard: enough traffic that the peer's
+        # own first-request compile spike decays out of its EWMA (the
+        # median must reflect steady state, not the cold start)
+        for _ in range(12):
+            svc.run_plan(img, peer_plan())
+        for _ in range(5):  # slow primary feeds its own EWMA
+            np.testing.assert_array_equal(svc.run_plan(img, ERODE5), ref)
+        assert poll_until(
+            lambda: svc.stats()["health"][E5_PRIMARY]["state"] == "slow",
+            timeout=30,
+        ), svc.stats()["health"][E5_PRIMARY]
+        before = svc.stats()["resilience"]["reroutes"]
+        svc.run_plan(img, ERODE5)  # first drained request warms the survivor
+        t0 = time.monotonic()
+        for _ in range(5):
+            np.testing.assert_array_equal(svc.run_plan(img, ERODE5), ref)
+        drained_s = time.monotonic() - t0
+        stats = svc.stats()
+    h = stats["health"][E5_PRIMARY]
+    assert h["slow"] and h["slow_marks"] >= 1
+    assert h["state"] == "slow"  # degraded, not dead
+    assert h["trips"] == 0
+    assert stats["slow_shards"] == 1
+    assert stats["resilience"]["failovers"] == 0
+    assert stats["resilience"]["reroutes"] > before
+    # drained traffic never pays the 80 ms gray tax
+    assert drained_s < 5 * 0.080, drained_s
+
+
+def test_slow_state_recovers_on_ewma_decay():
+    """Slow is reversible: when the EWMA falls back toward the peer median
+    the shard is unmarked (hysteresis via slow_exit_factor) and the
+    recovery is counted — all without the breaker ever moving."""
+    c = cfg(failover=FailoverPolicy(slow_min_count=2, slow_min_ms=1.0))
+    with ShardedMorphService(c, devices=logical_devices(2)) as svc:
+        other = 1 - E5_PRIMARY % 2
+        for _ in range(4):
+            svc._observe_latency(E5_PRIMARY % 2, 100.0)
+            svc._observe_latency(other, 2.0)
+        assert svc.stats()["health"][E5_PRIMARY % 2]["state"] == "slow"
+        for _ in range(40):  # decay back to the peer's neighborhood
+            svc._observe_latency(E5_PRIMARY % 2, 2.0)
+        h = svc.stats()["health"][E5_PRIMARY % 2]
+    assert not h["slow"]
+    assert h["state"] == "closed"
+    assert h["slow_recoveries"] == 1
+    assert h["trips"] == 0
+
+
+def test_hedged_requests_exactly_once_and_single_count():
+    """Chaos: every request races a hedge against a gray-slow primary.
+    Every future resolves exactly once with the bit-exact result, and the
+    router's request count ticks once per caller request even though two
+    shards did the work (extends the barrier-race guarantees to hedging)."""
+    c = cfg(window_ms=1.0, retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(slow_detection=False),
+            hedge=HedgePolicy(enabled=True, min_delay_ms=10.0,
+                              max_delay_ms=40.0),
+            faults=FaultPlan(latency_ms=120.0, latency_shard=E5_PRIMARY))
+    imgs = [rand(40 + i, 50) for i in range(16)]
+    refs = [np.asarray(erode(im, (5, 5))) for im in imgs]
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        futs = [svc.submit_plan(im, ERODE5) for im in imgs]
+        results = [f.result(timeout=120) for f in futs]
+        stats = svc.stats()
+    for got, ref in zip(results, refs):
+        np.testing.assert_array_equal(got, ref)
+    assert all(f.done() for f in futs)
+    res = stats["resilience"]
+    assert res["hedges"] >= 1
+    assert res["hedge_wins"] <= res["hedges"]
+    # exactly one count per caller request, however many shards raced on it
+    assert stats["requests"] == len(imgs)
+    # shard-side counters still see the duplicated work
+    assert sum(p["requests"] for p in stats["per_shard"]) >= len(imgs)
+    # hedging is a latency tool, not a health verdict: nothing tripped
+    assert all(h["trips"] == 0 for h in stats["health"])
+
+
+def test_hedge_disabled_keeps_request_counts_equal():
+    """Without hedging the router-own count and the per-shard sum agree —
+    the single-count bookkeeping is invisible when nothing races."""
+    with ShardedMorphService(cfg(), devices=logical_devices(2)) as svc:
+        for _ in range(6):
+            svc.run_plan(rand(), ERODE5)
+        stats = svc.stats()
+    assert stats["requests"] == 6
+    assert sum(p["requests"] for p in stats["per_shard"]) == 6
+    assert stats["resilience"]["hedges"] == 0
