@@ -256,6 +256,44 @@ def rle_table(path: str) -> str:
     return "\n".join(out)
 
 
+def router_table(path: str) -> str:
+    with open(path) as f:
+        d = json.load(f)
+    q, k, te = d["qps_slo"], d["worker_kill"], d["typed_errors"]
+    out = [f"### Front-tier ingress ({d['workers']} worker processes, "
+           f"crc32 affinity routing)", "",
+           "| tenant | priority | submitted | completed | p99 ms | SLO ms | "
+           "SLO attained |",
+           "|---|---|---|---|---|---|---|"]
+    for name, c in q["classes"].items():
+        out.append(
+            f"| {name} | {c['priority']} | {c['submitted']} "
+            f"| {c['completed']} | {c['p99_ms']} | {c['slo_ms']} "
+            f"| {c['slo_attained']} |")
+    out.append("")
+    out.append(
+        f"offered {q['offered_qps']} req/s open-loop, sustained "
+        f"{q['sustained_qps']} req/s ({q['completed']}/{q['requests']} "
+        f"completed; healthy calibration {q['healthy_img_s']} img/s at "
+        f"p99 {q['healthy_p99_ms']} ms). Every remote result in the "
+        f"{len(d['bit_exact']['plans'])}-plan mix is bit-exact vs a direct "
+        f"in-process service ({d['bit_exact']['checked']} checked).")
+    out.append("")
+    out.append(
+        f"typed errors over the wire: DeadlineExceeded, QuotaExceeded "
+        f"(tenant `{te['quota']['tenant']}`, {te['quota']['typed']} sheds), "
+        f"ServiceClosed from a draining worker ({te['service_closed']['drained']} "
+        f"in-flight requests drained to results first) — all reconstructed "
+        f"client-side as the same exception types. Worker kill (SIGKILL on "
+        f"owner {k['victim']}): {k['completed']}/{k['requests']} futures "
+        f"completed bit-exact via survivors, fleet stats merged across "
+        f"{k['healthy_workers']} live workers, cross-process trace "
+        f"{k['trace_events']} events over pids {k['trace_pids']} with "
+        f"{k['trace_validation_errors']} schema errors and "
+        f"{k['open_spans']} open spans (`{k['trace_file']}`).")
+    return "\n".join(out)
+
+
 def roofline_table(path: str) -> str:
     with open(path) as f:
         rows = json.load(f)
@@ -323,6 +361,10 @@ def main():
         parts.append(rle_table(f"{base}/BENCH_rle.json"))
     except FileNotFoundError:
         parts.append("RLE results missing (run benchmarks.bench_rle)")
+    try:
+        parts.append(router_table(f"{base}/BENCH_router.json"))
+    except FileNotFoundError:
+        parts.append("ingress results missing (run benchmarks.bench_router)")
     try:
         parts.append(roofline_table(f"{base}/roofline.json"))
     except FileNotFoundError:

@@ -1,7 +1,11 @@
-"""Serving substrate — two engines, one story:
+"""Serving substrate — two engines and the process boundary:
 
 * ``serve.engine``: batched LM decode (prefill + generate over the KV cache);
 * ``serve.morph``: async morphology serving (micro-batching, shape buckets,
-  executable cache, halo-correct tiling) over the fused 2-D kernels.
+  executable cache, halo-correct tiling) over the fused 2-D kernels;
+* ``serve.ingress``: the morphology tier as a deployable multi-process
+  service — wire protocol, worker hosts, the affinity-routing frontier,
+  and cross-process stats/trace merge (imported on demand; it pulls in no
+  extra dependencies but has no business loading for in-process users).
 """
 from repro.serve.engine import generate, prefill

@@ -1,0 +1,367 @@
+"""Ingress wire protocol: versioned length-prefixed JSON + raw-tensor frames.
+
+One frame is::
+
+    !4s B I I         magic b"MRF1" | version | header_len | payload_len
+    header_len bytes  UTF-8 JSON header (the message)
+    payload_len bytes raw little-endian tensor bytes (may be empty)
+
+The JSON header carries everything structured (message type, request id,
+plan spec, tensor dtype/shape, tenancy fields, error payloads); the binary
+payload carries only tensor data, so a 4 Mpx uint8 image costs 4 MB on the
+wire, not 4 MB of base64. The version byte sits *outside* the JSON: a
+reader can always finish framing a message it refuses to parse, reply with
+a typed :class:`ProtocolError`, and keep the connection — which is what
+the version-skew tests pin down. Skew rules:
+
+* unknown **fields** in a known-version header are ignored (decoders read
+  with ``.get``), so additive protocol evolution is free;
+* an unknown **version** is rejected with a typed :class:`ProtocolError`
+  after the frame is consumed — never by dropping the connection.
+
+Message types (the frozen-schema tests snapshot these key sets):
+
+* ``submit``    — plan spec + tensor meta (+ payload), ``deadline_ms``,
+  ``tag``, ``tenant``, ``priority``, ``trace``;
+* ``result``    — named output tensors, concatenated in the payload;
+* ``error``     — a :func:`encode_error` dict; :func:`decode_error`
+  reconstructs the *same* typed exception client-side;
+* ``stats`` / ``stats_result`` — a worker's ``metrics_snapshot()`` (the
+  cross-process merge unit) plus its ``stats()`` view;
+* ``health`` / ``health_result`` — liveness + the clock handshake
+  (``t_local`` is the worker's ``perf_counter``) the frontier uses to
+  shift worker trace timestamps onto its own timebase;
+* ``trace`` / ``trace_result`` — a worker's Chrome-trace export + open
+  span count;
+* ``shutdown`` / ``shutdown_result`` — ask a worker host to drain and
+  close (the remote handle on its drain-then-reject shutdown).
+
+Error transport is lossless by construction: :func:`decode_error` rebuilds
+the exception via ``cls.__new__`` + attribute restore instead of calling
+``__init__``, so the message (which already embeds the ``[plan=…, …]``
+context suffix composed at raise time) is not re-composed, and
+``type(exc)``, ``str(exc)``, ``retryable``, the five context fields, and
+the subtype extras (``tenant``, ``level``, ``priority``, ``tag``) all
+round-trip bit-for-bit. Unknown error type names degrade to the base
+:class:`ServeError` with ``retryable`` carried as data — old clients stay
+correct against newer servers.
+"""
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+from repro.serve.morph.plans import Plan, Step, UnknownPlan, get_plan
+from repro.serve.morph.resilience import (
+    BrownoutShed,
+    DeadlineExceeded,
+    ExecutorError,
+    InjectedFault,
+    Overloaded,
+    PoisonedRequest,
+    QuotaExceeded,
+    ServeError,
+    ServiceClosed,
+    ShardUnavailable,
+)
+
+PROTOCOL_VERSION = 1
+MAGIC = b"MRF1"
+
+_FRAME = struct.Struct("!4sBII")
+# sanity bounds: a corrupt length prefix must fail loudly, not allocate
+MAX_HEADER = 16 << 20
+MAX_PAYLOAD = 1 << 30
+
+
+# --------------------------------------------------------------------- errors
+class ProtocolError(ServeError):
+    """The peer sent something this protocol version cannot parse: bad
+    magic, an unknown version byte, or a structurally invalid message.
+    Not retryable — resending the same bytes cannot help."""
+
+    retryable = False
+
+
+class ConnectionLost(ServeError):
+    """The transport died with requests outstanding. Retryable: the
+    morphology plans are pure functions of their input, so re-running a
+    request whose first attempt may or may not have executed is sound."""
+
+    retryable = True
+
+
+# ------------------------------------------------------------------- framing
+def encode_frame(header: dict, payload: bytes = b"") -> bytes:
+    """One wire frame as bytes (write with a single ``sendall`` so frames
+    from concurrent responders never interleave)."""
+    hdr = json.dumps(header, default=_json_default).encode()
+    return b"".join(
+        (_FRAME.pack(MAGIC, PROTOCOL_VERSION, len(hdr), len(payload)),
+         hdr, payload)
+    )
+
+
+def read_frame(rfile) -> tuple[dict, bytes] | None:
+    """Read one frame from a buffered binary file-like. Returns ``(header,
+    payload)``; ``None`` on clean EOF at a frame boundary. Raises
+    :class:`ProtocolError` for bad magic/version/JSON (the offending frame
+    is consumed first, so the connection survives and can carry the typed
+    error back) and :class:`ConnectionLost` for EOF mid-frame."""
+    prefix = rfile.read(_FRAME.size)
+    if not prefix:
+        return None  # clean EOF between frames
+    if len(prefix) < _FRAME.size:
+        raise ConnectionLost("EOF inside a frame prefix")
+    magic, version, hlen, plen = _FRAME.unpack(prefix)
+    if magic != MAGIC:
+        # nothing after a framing desync can be trusted; no recovery
+        raise ProtocolError(f"bad frame magic {magic!r}")
+    if hlen > MAX_HEADER or plen > MAX_PAYLOAD:
+        raise ProtocolError(f"frame lengths out of range ({hlen}, {plen})")
+    body = rfile.read(hlen + plen)
+    if len(body) < hlen + plen:
+        raise ConnectionLost("EOF inside a frame body")
+    if version != PROTOCOL_VERSION:
+        raise ProtocolError(
+            f"unsupported protocol version {version} "
+            f"(this side speaks {PROTOCOL_VERSION})"
+        )
+    try:
+        header = json.loads(body[:hlen])
+    except ValueError as exc:
+        raise ProtocolError(f"unparseable frame header: {exc}") from None
+    if not isinstance(header, dict):
+        raise ProtocolError("frame header must be a JSON object")
+    return header, body[hlen:]
+
+
+def _json_default(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (set, frozenset)):
+        return sorted(v)
+    return str(v)
+
+
+# ------------------------------------------------------------------- tensors
+def encode_tensor(arr: np.ndarray) -> tuple[dict, bytes]:
+    """``(meta, bytes)`` for one array. ``dtype.str`` carries the byte
+    order, so bool (``|b1``) and every multi-byte dtype reconstruct
+    exactly."""
+    arr = np.ascontiguousarray(arr)
+    return {"dtype": arr.dtype.str, "shape": list(arr.shape)}, arr.tobytes()
+
+
+def decode_tensor(meta: dict, buf) -> np.ndarray:
+    dt = np.dtype(meta["dtype"])
+    shape = tuple(meta["shape"])
+    n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+    if len(buf) < n:
+        raise ProtocolError(
+            f"tensor payload short: {len(buf)} bytes for {shape} {dt}"
+        )
+    return np.frombuffer(buf[:n], dtype=dt).reshape(shape)
+
+
+def encode_result(result) -> tuple[dict, bytes]:
+    """A service result — a bare array (single-output plans) or a
+    ``{name: array}`` dict — as ``(meta, payload)``. The meta records which
+    shape it was so the client-side API mirrors the local one exactly."""
+    if isinstance(result, dict):
+        items = [(str(k), np.asarray(v)) for k, v in result.items()]
+        kind = "dict"
+    else:
+        items = [("out", np.asarray(result))]
+        kind = "array"
+    outputs, chunks = [], []
+    for name, arr in items:
+        meta, raw = encode_tensor(arr)
+        meta["name"] = name
+        outputs.append(meta)
+        chunks.append(raw)
+    return {"kind": kind, "outputs": outputs}, b"".join(chunks)
+
+
+def decode_result(meta: dict, payload: bytes):
+    out, off = {}, 0
+    for m in meta.get("outputs", ()):
+        dt = np.dtype(m["dtype"])
+        n = int(np.prod(tuple(m["shape"]), dtype=np.int64)) * dt.itemsize
+        out[m["name"]] = decode_tensor(m, payload[off:off + n])
+        off += n
+    if meta.get("kind") == "array":
+        return next(iter(out.values()))
+    return out
+
+
+# -------------------------------------------------------------------- errors
+# Every typed exception a service can raise, by wire name. decode_error
+# falls back to ServeError for names minted by a newer peer.
+WIRE_ERRORS: dict[str, type] = {
+    cls.__name__: cls
+    for cls in (
+        ServeError, Overloaded, QuotaExceeded, BrownoutShed,
+        DeadlineExceeded, ServiceClosed, ExecutorError, PoisonedRequest,
+        InjectedFault, ShardUnavailable, UnknownPlan,
+        ProtocolError, ConnectionLost,
+    )
+}
+
+_CONTEXT_FIELDS = ("plan", "bucket", "dtype", "batch", "shard")
+_EXTRA_FIELDS = ("tenant", "level", "priority", "tag")
+
+
+def encode_error(exc: BaseException) -> dict:
+    """Any exception as a wire dict. Typed :class:`ServeError` subclasses
+    keep their exact identity; anything else (a stray ValueError inside a
+    handler) degrades to the base type with the original class named in
+    the message — remote callers always get *a* typed error."""
+    if isinstance(exc, ServeError):
+        name = type(exc).__name__
+        if name not in WIRE_ERRORS:
+            name = "ServeError"
+        message = exc.args[0] if exc.args else str(exc)
+    else:
+        name = "ServeError"
+        message = f"{type(exc).__name__}: {exc}"
+    d: dict = {
+        "name": name,
+        "message": message,
+        "retryable": bool(getattr(exc, "retryable", False)),
+        "context": {
+            k: v for k in _CONTEXT_FIELDS
+            if (v := getattr(exc, k, None)) is not None
+        },
+    }
+    extra = {
+        k: v for k in _EXTRA_FIELDS
+        if (v := getattr(exc, k, None)) is not None
+    }
+    if extra:
+        d["extra"] = extra
+    return d
+
+
+def decode_error(d: dict) -> ServeError:
+    """The typed exception back from its wire dict. Reconstruction skips
+    ``__init__`` (which would re-compose the ``[ctx]`` message suffix) and
+    restores attributes directly, so ``str``, type, and every field match
+    the original exactly."""
+    cls = WIRE_ERRORS.get(d.get("name"), ServeError)
+    exc = cls.__new__(cls)
+    Exception.__init__(exc, d.get("message", ""))
+    ctx = d.get("context") or {}
+    for k in _CONTEXT_FIELDS:
+        v = ctx.get(k)
+        if k == "bucket" and isinstance(v, list):
+            v = tuple(v)
+        setattr(exc, k, v)
+    for k in _EXTRA_FIELDS:
+        if k in (d.get("extra") or {}):
+            setattr(exc, k, d["extra"][k])
+    if cls is ServeError and "retryable" in d:
+        # unknown subtype from a newer peer: honor its retryability as data
+        exc.retryable = bool(d["retryable"])
+    return exc
+
+
+# --------------------------------------------------------------------- plans
+def plan_to_wire(plan) -> dict:
+    """A plan reference as a wire spec: registered plans go by name (the
+    worker resolves against its own registry — a miss comes back as a
+    typed :class:`UnknownPlan`), step-built plans ship their steps.
+    Expression-built plans have no wire form — register them on the worker
+    and submit by name."""
+    if isinstance(plan, str):
+        return {"name": plan}
+    plan = get_plan(plan)
+    if plan.steps:
+        return {
+            "name": plan.name,
+            "steps": [
+                {"op": s.op, "se": [s.se[0], s.se[1]],
+                 "save_as": s.save_as, "astype": s.astype}
+                for s in plan.steps
+            ],
+        }
+    return {"name": plan.name}
+
+
+def plan_from_wire(spec: dict):
+    """The worker-side resolution of a wire spec: explicit steps rebuild a
+    :class:`Plan`; a bare name resolves against the worker's registry
+    (so ``submit_plan`` raises :class:`UnknownPlan` typed)."""
+    steps = spec.get("steps")
+    if steps:
+        return Plan(
+            str(spec.get("name") or "wire_plan"),
+            tuple(
+                Step(s["op"], tuple(s["se"]),
+                     save_as=s.get("save_as"), astype=s.get("astype"))
+                for s in steps
+            ),
+        )
+    name = spec.get("name")
+    if not name:
+        raise ProtocolError("plan spec needs 'name' or 'steps'")
+    return name
+
+
+# ------------------------------------------------------------------ messages
+def submit_message(req_id: int, plan_spec: dict, arr: np.ndarray, *,
+                   deadline_ms: float | None = None, tag: str | None = None,
+                   tenant: str | None = None, priority: int = 0,
+                   trace: int | None = None) -> tuple[dict, bytes]:
+    meta, payload = encode_tensor(arr)
+    return (
+        {
+            "type": "submit",
+            "id": req_id,
+            "plan": plan_spec,
+            "tensor": meta,
+            "deadline_ms": deadline_ms,
+            "tag": tag,
+            "tenant": tenant,
+            "priority": priority,
+            "trace": trace,
+        },
+        payload,
+    )
+
+
+def result_message(req_id: int, result) -> tuple[dict, bytes]:
+    meta, payload = encode_result(result)
+    return {"type": "result", "id": req_id, "result": meta}, payload
+
+
+def error_message(req_id, exc: BaseException) -> tuple[dict, bytes]:
+    return {"type": "error", "id": req_id, "error": encode_error(exc)}, b""
+
+
+__all__ = [
+    "PROTOCOL_VERSION",
+    "MAGIC",
+    "ProtocolError",
+    "ConnectionLost",
+    "encode_frame",
+    "read_frame",
+    "encode_tensor",
+    "decode_tensor",
+    "encode_result",
+    "decode_result",
+    "WIRE_ERRORS",
+    "encode_error",
+    "decode_error",
+    "plan_to_wire",
+    "plan_from_wire",
+    "submit_message",
+    "result_message",
+    "error_message",
+]

@@ -1,0 +1,290 @@
+"""Node-health state machine: circuit breakers + slow-state (gray) marks.
+
+Extracted from ``repro.shard.router`` (ISSUE 10) so the same machinery
+drives both routing tiers:
+
+* ``ShardedMorphService`` tracks per-*shard* health inside one process;
+* the ingress ``Frontier`` (``repro.serve.ingress``) tracks per-*worker
+  process* health across the fleet.
+
+Both route by the stable crc32 of a ``(plan, bucket, dtype)`` group token
+and both want identical semantics — breakers open on consecutive errors,
+half-open probes test recovery, slow-but-alive nodes drain without ever
+being declared dead — so the state machine lives here once and each tier
+holds a :class:`HealthTracker` over its own node list.
+
+The tracker owns one lock. ``pick`` / ``record_success`` /
+``record_failure`` / ``observe_latency`` take it internally; callers that
+need to read node state atomically with their own counters (the shard
+router's stats path) may hold ``tracker.lock`` themselves — the class is
+deliberately lock-visible rather than lock-hidden.
+
+State vocabulary (``NodeHealth.snapshot()["state"]``):
+
+* ``"closed"`` — healthy, routable;
+* ``"open"`` — breaker tripped by ``failure_threshold`` consecutive
+  node-level errors (or an abrupt ``mark_dead``); traffic reroutes
+  deterministically to survivors;
+* ``"half-open"`` — one live probe in flight after ``probe_interval_s``;
+* ``"slow"`` — alive (breaker closed) but its completion-latency EWMA
+  reads worse than ``slow_factor`` x the healthy-peer median; new traffic
+  routes away, a trickle probe keeps the EWMA fed so recovery is
+  observable. Slow is never dead: the breaker state machine ignores it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+
+from repro.serve.morph.resilience import FailoverPolicy, ShardUnavailable
+
+
+class NodeHealth:
+    """Breaker + slow-state fields for one node. All mutation happens under
+    the owning tracker's lock; reads for stats() take the same lock."""
+
+    def __init__(self):
+        self.state = "closed"  # "closed" (healthy) | "open" (broken)
+        self.consecutive_failures = 0
+        self.opened_at: float | None = None
+        self.probing = False  # one half-open probe in flight
+        self.trips = 0
+        self.probes = 0
+        self.recoveries = 0
+        # slow-state (gray-failure) tracking — orthogonal to the breaker:
+        # `state` only ever moves on errors, `slow` only on latency
+        self.latency_ewma_ms: float | None = None
+        self.latency_samples = 0
+        self.slow = False
+        self.last_slow_probe = 0.0
+        self.samples_at_mark = 0
+        self.slow_marks = 0
+        self.slow_recoveries = 0
+
+    def snapshot(self) -> dict:
+        state = "half-open" if self.probing else self.state
+        if state == "closed" and self.slow:
+            state = "slow"  # alive, deprioritized — never "open"
+        return {
+            "state": state,
+            "consecutive_failures": self.consecutive_failures,
+            "trips": self.trips,
+            "probes": self.probes,
+            "recoveries": self.recoveries,
+            "slow": self.slow,
+            "slow_marks": self.slow_marks,
+            "slow_recoveries": self.slow_recoveries,
+            "latency_ewma_ms": (
+                round(self.latency_ewma_ms, 3)
+                if self.latency_ewma_ms is not None else None
+            ),
+        }
+
+
+class HealthTracker:
+    """The breaker/slow-mark state machine over ``n`` routable nodes.
+
+    ``noun`` names the node kind in error messages (``"shard"`` for the
+    in-process router, ``"worker"`` for the ingress frontier) so a caller
+    reading a :class:`ShardUnavailable` knows which tier gave up.
+    """
+
+    def __init__(self, n: int, policy: FailoverPolicy, *, noun: str = "shard"):
+        if n < 1:
+            raise ValueError(f"HealthTracker needs at least one {noun}")
+        self.policy = policy
+        self.noun = noun
+        self.lock = threading.Lock()
+        self.nodes = [NodeHealth() for _ in range(n)]
+        self.reroutes = 0
+        self.trips = 0  # total breaker openings across all nodes
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    # ------------------------------------------------------------- routing
+    def healthy_locked(self, i: int) -> bool:
+        """Breaker-closed check; caller holds ``self.lock``."""
+        return self.nodes[i].state == "closed"
+
+    def pick(self, token: bytes, excluded: frozenset) -> tuple[int, bool]:
+        """Deterministic node choice for a group token: the crc32 primary
+        when healthy, else the same hash over the healthy survivors — a
+        broken node's groups all move, each to one stable survivor. Returns
+        ``(index, is_probe)``; may promote the call into a half-open probe
+        of the primary. Raises :class:`ShardUnavailable` when nothing is
+        routable."""
+        h = zlib.crc32(token)
+        n = len(self.nodes)
+        primary = h % n
+        now = time.monotonic()
+        with self.lock:
+            hp = self.nodes[primary]
+            if primary not in excluded:
+                if hp.state == "closed":
+                    if not hp.slow:
+                        return primary, False
+                    # slow primary: a trickle probe keeps its latency EWMA
+                    # fed, so recovery is observable — otherwise the node
+                    # drains and its last (inflated) EWMA pins it slow
+                    # forever; everything else reroutes away below
+                    if (
+                        now - hp.last_slow_probe
+                        >= self.policy.slow_probe_interval_s
+                    ):
+                        hp.last_slow_probe = now
+                        return primary, False
+                # broken primary: probe it if the interval elapsed and no
+                # probe is already in flight
+                elif (
+                    not hp.probing
+                    and hp.opened_at is not None
+                    and now - hp.opened_at >= self.policy.probe_interval_s
+                ):
+                    hp.probing = True
+                    hp.probes += 1
+                    return primary, True
+            candidates = [
+                i for i in range(n)
+                if i not in excluded and i != primary
+                and self.healthy_locked(i)
+            ]
+            # prefer survivors that aren't themselves slow; slowness never
+            # makes a group unroutable (slow < dead, by construction)
+            fast = [i for i in candidates if not self.nodes[i].slow]
+            survivors = fast or candidates
+            if not survivors:
+                if primary not in excluded and hp.state == "closed":
+                    return primary, False  # slow primary beats nothing
+                raise ShardUnavailable(
+                    f"no healthy {self.noun} for group (primary {primary} "
+                    f"{hp.state}, {len(excluded)} excluded of {n})"
+                )
+            self.reroutes += 1
+            return survivors[h % len(survivors)], False
+
+    # ------------------------------------------------------------- outcomes
+    def record_success(self, idx: int, was_probe: bool) -> None:
+        with self.lock:
+            h = self.nodes[idx]
+            h.consecutive_failures = 0
+            if was_probe:
+                h.probing = False
+            if h.state != "closed":
+                h.state = "closed"
+                h.opened_at = None
+                h.recoveries += 1
+
+    def record_failure(self, idx: int, was_probe: bool) -> bool:
+        """Count a node-level failure; returns True when this failure
+        tripped the breaker (open from closed) so the caller can kick off
+        reroute-time work (the shard router's cache rewarm)."""
+        with self.lock:
+            h = self.nodes[idx]
+            h.consecutive_failures += 1
+            if was_probe:
+                h.probing = False
+            tripped = (
+                h.state == "closed"
+                and h.consecutive_failures >= self.policy.failure_threshold
+            )
+            if tripped or was_probe:
+                if h.state == "closed":
+                    h.trips += 1
+                    self.trips += 1
+                h.state = "open"
+                h.opened_at = time.monotonic()
+            return tripped
+
+    def mark_dead(self, idx: int) -> bool:
+        """Open a node's breaker immediately — the ingress tier's verdict
+        for a lost TCP connection, which is definitive in a way a single
+        request error is not. Returns True if the breaker newly opened."""
+        with self.lock:
+            h = self.nodes[idx]
+            h.consecutive_failures += 1
+            h.probing = False
+            newly = h.state == "closed"
+            if newly:
+                h.trips += 1
+                self.trips += 1
+            h.state = "open"
+            h.opened_at = time.monotonic()
+            return newly
+
+    # ------------------------------------------------- slow-state (gray)
+    def observe_latency(self, idx: int, ms: float) -> None:
+        """Feed one successful attempt's residence latency (submit to
+        resolution, queue wait included — that is what the caller feels)
+        into the node's EWMA, then re-score every node against the peer
+        median. Errors never reach here: the breaker owns those."""
+        po = self.policy
+        if not po.slow_detection:
+            return
+        with self.lock:
+            h = self.nodes[idx]
+            a = po.slow_ewma_alpha
+            h.latency_ewma_ms = (
+                ms if h.latency_ewma_ms is None
+                else (1.0 - a) * h.latency_ewma_ms + a * ms
+            )
+            h.latency_samples += 1
+            self._rescore_slow_locked()
+
+    def _rescore_slow_locked(self) -> None:
+        """Under ``self.lock``: mark/unmark slow by comparing each node's
+        EWMA to the median over breaker-closed nodes with data.
+        Peer-relative scoring is the point — an absolute threshold can't
+        tell a slow node from a slow traffic mix, but one outlier against
+        its own peers on the same mix is a gray failure."""
+        po = self.policy
+        # only settled EWMAs join the peer pool — the bar is symmetric with
+        # being markable: a survivor's single compile-spike sample must not
+        # drag the median up and un-mark a genuinely slow node
+        vals = sorted(
+            h.latency_ewma_ms for h in self.nodes
+            if h.latency_ewma_ms is not None and h.state == "closed"
+            and h.latency_samples >= po.slow_min_count
+        )
+        if len(vals) < 2:
+            return  # one data point has no peers to be slow against
+        # lower-middle median: with few reporting nodes the upper middle
+        # can BE the outlier (2 nodes: upper median = max, and nothing
+        # could ever score slow against itself)
+        median = vals[(len(vals) - 1) // 2]
+        for h in self.nodes:
+            e = h.latency_ewma_ms
+            if e is None:
+                continue
+            if not h.slow:
+                if (
+                    h.latency_samples >= po.slow_min_count
+                    and e > po.slow_factor * median
+                    and e > po.slow_min_ms
+                ):
+                    h.slow = True
+                    h.slow_marks += 1
+                    h.samples_at_mark = h.latency_samples
+                    # trickle probing starts one full interval from the
+                    # mark (not from process start): the first drained
+                    # requests all reroute, then one probe feeds the EWMA
+                    h.last_slow_probe = time.monotonic()
+            elif (
+                # recovery takes evidence from the node itself (a probe or
+                # hedge completion since the mark) — a drained node's
+                # frozen EWMA must not "recover" just because its peers'
+                # median drifted up under load
+                h.latency_samples > h.samples_at_mark
+                and (e <= po.slow_exit_factor * median or e <= po.slow_min_ms)
+            ):
+                h.slow = False
+                h.slow_recoveries += 1
+
+    # ------------------------------------------------------------- reading
+    def snapshot(self) -> list[dict]:
+        with self.lock:
+            return [h.snapshot() for h in self.nodes]
+
+
+__all__ = ["NodeHealth", "HealthTracker"]

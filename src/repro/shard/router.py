@@ -41,8 +41,11 @@ but the breaker does not move and the shard is never declared dead — a
 trickle probe (one request per ``slow_probe_interval_s``) keeps its EWMA
 fresh so recovery (below ``slow_exit_factor`` x median) is observable.
 **Hedged dispatch** (``ServiceConfig.hedge``) — after a p99-derived delay
-read from the merged latency histograms, a still-unresolved request is
-resubmitted to the next healthy shard; first result wins, the caller's
+read from the *peer* shards' latency histograms (the shard the request is
+riding on is excluded, so a gray shard's own slow completions can't
+inflate the trigger that is supposed to rescue requests stuck on it), a
+still-unresolved request is resubmitted to the next healthy shard; first
+result wins, the caller's
 future resolves exactly once (a per-request lock arbitrates the race),
 and the router's own ``requests`` count ticks once per caller request no
 matter how many shards raced on it. Both are driven by the replayable
@@ -86,6 +89,7 @@ from repro.obs import (
     quantile_from_snapshot,
 )
 from repro.serve.morph.buckets import choose_bucket
+from repro.serve.morph.health import HealthTracker
 from repro.serve.morph.plans import Plan, get_plan, single_op_plan
 from repro.serve.morph.resilience import (
     DeadlineExceeded,
@@ -101,48 +105,6 @@ from repro.serve.morph.tenancy import PRIORITY_NORMAL
 # deadline, poison, overload, closed — is about the request or the caller
 # and propagates without penalizing the shard that reported it.
 SHARD_LEVEL_ERRORS = (InjectedFault, ExecutorError)
-
-
-class _ShardHealth:
-    """Circuit-breaker state for one shard. All mutation happens under the
-    router's health lock; reads for stats() take the same lock."""
-
-    def __init__(self):
-        self.state = "closed"  # "closed" (healthy) | "open" (broken)
-        self.consecutive_failures = 0
-        self.opened_at: float | None = None
-        self.probing = False  # one half-open probe in flight
-        self.trips = 0
-        self.probes = 0
-        self.recoveries = 0
-        # slow-state (gray-failure) tracking — orthogonal to the breaker:
-        # `state` only ever moves on errors, `slow` only on latency
-        self.latency_ewma_ms: float | None = None
-        self.latency_samples = 0
-        self.slow = False
-        self.last_slow_probe = 0.0
-        self.samples_at_mark = 0
-        self.slow_marks = 0
-        self.slow_recoveries = 0
-
-    def snapshot(self) -> dict:
-        state = "half-open" if self.probing else self.state
-        if state == "closed" and self.slow:
-            state = "slow"  # alive, deprioritized — never "open"
-        return {
-            "state": state,
-            "consecutive_failures": self.consecutive_failures,
-            "trips": self.trips,
-            "probes": self.probes,
-            "recoveries": self.recoveries,
-            "slow": self.slow,
-            "slow_marks": self.slow_marks,
-            "slow_recoveries": self.slow_recoveries,
-            "latency_ewma_ms": (
-                round(self.latency_ewma_ms, 3)
-                if self.latency_ewma_ms is not None else None
-            ),
-        }
 
 
 class _RequestCtx:
@@ -198,21 +160,40 @@ class ShardedMorphService:
             if obs_cfg is not None and obs_cfg.enabled
             else None
         )
-        self._hlock = threading.Lock()
-        self._health = [_ShardHealth() for _ in self.shards]
+        # breaker + slow-state machinery shared with the ingress frontier
+        # (serve/morph/health.py). The router's own counters share the
+        # tracker's lock — the pre-extraction code had exactly one health
+        # lock, and keeping that invariant means no new lock-ordering to
+        # reason about. Methods below never call a self-locking tracker
+        # method while holding _hlock.
+        self._tracker = HealthTracker(
+            len(self.shards), self.failover, noun="shard"
+        )
+        self._hlock = self._tracker.lock
+        self._health = self._tracker.nodes
         # groups seen (token -> (plan, bucket, dtype)), for failover rewarm
         self._groups: dict[bytes, tuple[Plan, tuple | None, str]] = {}
         self._rewarmed: set[tuple[int, bytes]] = set()
-        self.reroutes = 0
         self.rewarms = 0
-        self.failovers = 0  # breaker trips observed at routing level
-        # hedging (ISSUE 9): counters + the cached p99-derived delay
+        # hedging (ISSUE 9): counters + the cached peer-quantile delays
         self.hedges = 0
         self.hedge_wins = 0
         self._requests_ok = 0  # caller requests resolved with a result —
         # ticks once per request however many shards raced on it, which is
         # what keeps stats()["requests"] single-count under hedging
-        self._hedge_delay = (0.0, 0.0)  # (delay_ms, computed_at)
+        # hedge-delay cache, keyed by the excluded (hedge-target) shard:
+        # exclude -> (delay_ms, computed_at)
+        self._hedge_delay: dict[int | None, tuple[float, float]] = {}
+        self._hedge_delay_last_ms = 0.0
+
+    @property
+    def reroutes(self) -> int:
+        return self._tracker.reroutes
+
+    @property
+    def failovers(self) -> int:
+        """Breaker trips observed at routing level."""
+        return self._tracker.trips
 
     # ------------------------------------------------------------- routing
     @staticmethod
@@ -230,156 +211,53 @@ class ShardedMorphService:
         return self._health[i].state == "closed"
 
     def _pick(self, token: bytes, excluded: frozenset) -> tuple[int, bool]:
-        """Deterministic shard choice for a group token: the crc32 primary
-        when healthy, else the same hash over the healthy survivors — a
-        broken shard's groups all move, each to one stable survivor. Returns
-        ``(index, is_probe)``; may promote the call into a half-open probe
-        of the primary. Raises :class:`ShardUnavailable` when nothing is
+        """Deterministic shard choice for a group token — the breaker/
+        slow-state machine lives in :class:`HealthTracker` (shared with the
+        ingress frontier). Raises :class:`ShardUnavailable` when nothing is
         routable."""
-        h = zlib.crc32(token)
-        n = len(self.shards)
-        primary = h % n
-        now = time.monotonic()
-        with self._hlock:
-            hp = self._health[primary]
-            if primary not in excluded:
-                if hp.state == "closed":
-                    if not hp.slow:
-                        return primary, False
-                    # slow primary: a trickle probe keeps its latency EWMA
-                    # fed, so recovery is observable — otherwise the shard
-                    # drains and its last (inflated) EWMA pins it slow
-                    # forever; everything else reroutes away below
-                    if (
-                        now - hp.last_slow_probe
-                        >= self.failover.slow_probe_interval_s
-                    ):
-                        hp.last_slow_probe = now
-                        return primary, False
-                # broken primary: probe it if the interval elapsed and no
-                # probe is already in flight
-                elif (
-                    not hp.probing
-                    and hp.opened_at is not None
-                    and now - hp.opened_at >= self.failover.probe_interval_s
-                ):
-                    hp.probing = True
-                    hp.probes += 1
-                    return primary, True
-            candidates = [
-                i for i in range(n)
-                if i not in excluded and i != primary and self._healthy(i)
-            ]
-            # prefer survivors that aren't themselves slow; slowness never
-            # makes a group unroutable (slow < dead, by construction)
-            fast = [i for i in candidates if not self._health[i].slow]
-            survivors = fast or candidates
-            if not survivors:
-                if primary not in excluded and hp.state == "closed":
-                    return primary, False  # slow primary beats nothing
-                raise ShardUnavailable(
-                    f"no healthy shard for group (primary {primary} "
-                    f"{hp.state}, {len(excluded)} excluded of {n})"
-                )
-            self.reroutes += 1
-            return survivors[h % len(survivors)], False
+        return self._tracker.pick(token, excluded)
 
     def _record_success(self, idx: int, was_probe: bool) -> None:
-        with self._hlock:
-            h = self._health[idx]
-            h.consecutive_failures = 0
-            if was_probe:
-                h.probing = False
-            if h.state != "closed":
-                h.state = "closed"
-                h.opened_at = None
-                h.recoveries += 1
+        self._tracker.record_success(idx, was_probe)
 
     # ------------------------------------------------- slow-state (gray)
     def _observe_latency(self, idx: int, ms: float) -> None:
         """Feed one successful attempt's residence latency (submit to
         resolution, queue wait included — that is what the caller feels)
-        into the shard's EWMA, then re-score every shard against the peer
-        median. Errors never reach here: the breaker owns those."""
-        fo = self.failover
-        if not fo.slow_detection:
-            return
-        with self._hlock:
-            h = self._health[idx]
-            a = fo.slow_ewma_alpha
-            h.latency_ewma_ms = (
-                ms if h.latency_ewma_ms is None
-                else (1.0 - a) * h.latency_ewma_ms + a * ms
-            )
-            h.latency_samples += 1
-            self._rescore_slow_locked()
-
-    def _rescore_slow_locked(self) -> None:
-        """Under _hlock: mark/unmark slow by comparing each shard's EWMA to
-        the median over breaker-closed shards with data. Peer-relative
-        scoring is the point — an absolute threshold can't tell a slow
-        shard from a slow traffic mix, but one outlier against its own
-        peers on the same mix is a gray failure."""
-        fo = self.failover
-        # only settled EWMAs join the peer pool — the bar is symmetric with
-        # being markable: a survivor's single compile-spike sample must not
-        # drag the median up and un-mark a genuinely slow shard
-        vals = sorted(
-            h.latency_ewma_ms for h in self._health
-            if h.latency_ewma_ms is not None and h.state == "closed"
-            and h.latency_samples >= fo.slow_min_count
-        )
-        if len(vals) < 2:
-            return  # one data point has no peers to be slow against
-        # lower-middle median: with few reporting shards the upper middle
-        # can BE the outlier (2 shards: upper median = max, and nothing
-        # could ever score slow against itself)
-        median = vals[(len(vals) - 1) // 2]
-        for h in self._health:
-            e = h.latency_ewma_ms
-            if e is None:
-                continue
-            if not h.slow:
-                if (
-                    h.latency_samples >= fo.slow_min_count
-                    and e > fo.slow_factor * median
-                    and e > fo.slow_min_ms
-                ):
-                    h.slow = True
-                    h.slow_marks += 1
-                    h.samples_at_mark = h.latency_samples
-                    # trickle probing starts one full interval from the
-                    # mark (not from process start): the first drained
-                    # requests all reroute, then one probe feeds the EWMA
-                    h.last_slow_probe = time.monotonic()
-            elif (
-                # recovery takes evidence from the shard itself (a probe or
-                # hedge completion since the mark) — a drained shard's
-                # frozen EWMA must not "recover" just because its peers'
-                # median drifted up under load
-                h.latency_samples > h.samples_at_mark
-                and (e <= fo.slow_exit_factor * median or e <= fo.slow_min_ms)
-            ):
-                h.slow = False
-                h.slow_recoveries += 1
+        into the shard's EWMA; the tracker re-scores every shard against
+        the peer median. Errors never reach here: the breaker owns those."""
+        self._tracker.observe_latency(idx, ms)
 
     # --------------------------------------------------------- hedging
-    def _hedge_delay_s(self) -> float:
-        """The hedge trigger delay: the configured quantile of the merged
-        cross-shard latency histogram, clamped to the policy's bounds and
-        cached for ``refresh_s`` (the merge walks every shard registry).
-        Calibration debt: derived from completed-request latency, which
-        under-reads while a gray shard is still holding its requests —
-        recorded in ROADMAP."""
+    def _hedge_delay_s(self, exclude: int | None = None) -> float:
+        """The hedge trigger delay: the configured quantile of the latency
+        histograms merged over every shard EXCEPT ``exclude`` — the shard
+        the request is currently riding on, i.e. the hedge target. The
+        exclusion is the fix for the survivor-bias debt (ROADMAP, PR 9):
+        the merged histogram includes the gray shard's own slow
+        completions, so the moment one shard degrades, the merged p99
+        climbs toward that shard's latency and the hedge that was supposed
+        to rescue its requests never fires before they finish the slow
+        way. Measured against healthy peers only, the delay stays at the
+        fleet's actual service quantile and the gray shard's requests
+        hedge out. Clamped to the policy's bounds and cached per excluded
+        shard for ``refresh_s`` (the merge walks every peer registry)."""
         policy = self.config.hedge
         now = time.monotonic()
-        delay_ms, at = self._hedge_delay
+        delay_ms, at = self._hedge_delay.get(exclude, (0.0, 0.0))
         if now - at < policy.refresh_s and at > 0.0:
             return delay_ms / 1e3
-        lat = self.metrics_snapshot().get("latency_ms")
+        snaps = [
+            s.metrics_snapshot()
+            for i, s in enumerate(self.shards) if i != exclude
+        ]
+        lat = (
+            MetricsRegistry.merge(snaps).get("latency_ms") if snaps else None
+        )
         q = quantile_from_snapshot(lat, policy.quantile) if lat else 0.0
         delay_ms = min(max(q, policy.min_delay_ms), policy.max_delay_ms)
-        self._hedge_delay = (delay_ms, now)
+        self._hedge_delay[exclude] = (delay_ms, now)
+        self._hedge_delay_last_ms = delay_ms
         return delay_ms / 1e3
 
     def _resolve(self, ctx: _RequestCtx, outer: Future, *,
@@ -425,23 +303,10 @@ class ShardedMorphService:
         """Count a shard-level failure; on breaker trip, return the rewarm
         work ((survivor, plan, bucket, dtype) tuples) to run outside the
         lock."""
+        tripped = self._tracker.record_failure(idx, was_probe)
         rewarm: list = []
-        with self._hlock:
-            h = self._health[idx]
-            h.consecutive_failures += 1
-            if was_probe:
-                h.probing = False
-            tripped = (
-                h.state == "closed"
-                and h.consecutive_failures >= self.failover.failure_threshold
-            )
-            if tripped or was_probe:
-                if h.state == "closed":
-                    h.trips += 1
-                    self.failovers += 1
-                h.state = "open"
-                h.opened_at = time.monotonic()
-            if tripped and self.failover.rewarm:
+        if tripped and self.failover.rewarm:
+            with self._hlock:
                 rewarm = self._rewarm_targets(idx)
         return rewarm
 
@@ -497,7 +362,8 @@ class ShardedMorphService:
     def submit_plan(self, img, plan: "str | Plan", *,
                     deadline_ms: float | None = None, tag: str | None = None,
                     tenant: str | None = None,
-                    priority: int = PRIORITY_NORMAL):
+                    priority: int = PRIORITY_NORMAL,
+                    _trace: int | None = None):
         plan = get_plan(plan)
         img = np.asarray(img)
         if img.ndim != 2:
@@ -515,8 +381,13 @@ class ShardedMorphService:
         outer: Future = Future()
         # one trace ID per caller request, minted here so it survives every
         # failover hop and hedge (shards see it via _trace and must not
-        # re-mint — which is also what keeps per-request obs single-count)
-        trace = new_trace_id() if self._obs is not None else None
+        # re-mint — which is also what keeps per-request obs single-count).
+        # An ingress worker host passes the frontier's ID through `_trace`,
+        # so a trace spans processes the same way it spans hops.
+        if _trace is not None:
+            trace = _trace
+        else:
+            trace = new_trace_id() if self._obs is not None else None
         ctx = _RequestCtx()
         self._attempt(outer, img, plan, token, deadline_at, tag, frozenset(),
                       trace, ctx=ctx, tenant=tenant, priority=priority)
@@ -630,7 +501,10 @@ class ShardedMorphService:
                 if ctx.resolved or ctx.timer is not None:
                     return
                 timer = threading.Timer(
-                    self._hedge_delay_s(), self._hedge,
+                    # the delay excludes THIS attempt's shard: a hedge is
+                    # scored against the peers it would run on, never
+                    # against the (possibly gray) shard it rescues from
+                    self._hedge_delay_s(exclude=idx), self._hedge,
                     args=(ctx, outer, img, plan, token, deadline_at, tag,
                           tenant, priority, trace),
                 )
@@ -718,7 +592,7 @@ class ShardedMorphService:
                 failovers=self.failovers,
                 hedges=self.hedges,
                 hedge_wins=self.hedge_wins,
-                hedge_delay_ms=self._hedge_delay[0],
+                hedge_delay_ms=self._hedge_delay_last_ms,
             )
             requests_ok = self._requests_ok
         lat = merged.get("latency_ms")

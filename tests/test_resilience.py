@@ -669,3 +669,44 @@ def test_hedge_disabled_keeps_request_counts_equal():
     assert stats["requests"] == 6
     assert sum(p["requests"] for p in stats["per_shard"]) == 6
     assert stats["resilience"]["hedges"] == 0
+
+
+def test_hedge_delay_excludes_gray_target_latency():
+    """Regression for the PR 9 survivor-bias debt: the hedge trigger delay
+    is the p99 of the *peers* of the shard being hedged, not of a merged
+    histogram that shard itself inflates. Before the fix, a gray shard's
+    own slow completions dragged the merged p99 up to its latency, so the
+    hedge meant to rescue its requests armed too late to ever fire."""
+    c = cfg(window_ms=1.0, retry=fast_retry(max_retries=0),
+            failover=FailoverPolicy(slow_detection=False),
+            hedge=HedgePolicy(enabled=True, min_delay_ms=5.0,
+                              max_delay_ms=1000.0, refresh_s=600.0),
+            faults=FaultPlan(latency_ms=80.0, latency_shard=E5_PRIMARY))
+    peer = next(i for i in range(N_LOGICAL) if i != E5_PRIMARY)
+    with ShardedMorphService(c, devices=logical_devices()) as svc:
+        # deterministic histograms: the primary is gray at ~100 ms, every
+        # peer serves at ~3 ms
+        for i, shard in enumerate(svc.shards):
+            h = shard.metrics.histogram("latency_ms")
+            for _ in range(50):
+                h.observe(100.0 if i == E5_PRIMARY else 3.0)
+        # the old, biased number: a merge that includes the gray shard
+        # (here: excluding a healthy peer instead) reads the gray tax
+        biased_ms = svc._hedge_delay_s(exclude=peer) * 1e3
+        # the fixed number: hedging OFF the gray primary reads peers only
+        delay_ms = svc._hedge_delay_s(exclude=E5_PRIMARY) * 1e3
+        assert biased_ms >= 60.0, biased_ms
+        assert delay_ms <= 20.0, (delay_ms, biased_ms)
+        # live path: the trigger (cached above for refresh_s) fires well
+        # inside the primary's 80 ms gray tax, so its requests hedge out
+        imgs = [rand(40 + i, 50) for i in range(6)]
+        refs = [np.asarray(erode(im, (5, 5))) for im in imgs]
+        futs = [svc.submit_plan(im, ERODE5) for im in imgs]
+        results = [f.result(timeout=120) for f in futs]
+        stats = svc.stats()
+    for got, ref in zip(results, refs):
+        np.testing.assert_array_equal(got, ref)
+    res = stats["resilience"]
+    assert res["hedges"] >= 1  # the gray shard no longer suppresses them
+    assert res["hedge_delay_ms"] <= 20.0
+    assert stats["requests"] == len(imgs)
